@@ -1,0 +1,77 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+a markdown table: per (arch × shape × mesh) the three roofline terms, the
+dominant bottleneck, model-vs-HLO flop ratio, HBM fit, and the one-line
+"what would move the dominant term" note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute",): "raise MXU utilization: larger per-chip batch or fewer "
+                  "remat recomputes",
+    ("memory",): "cut HBM traffic: fuse more epilogues / reuse weights "
+                 "across microbatches / shrink collective staging buffers",
+    ("collective",): "reshard to cut cross-chip bytes: all-to-all dispatch, "
+                     "reduce-scatter grads, overlap with compute",
+}
+
+
+def load(dirname: str):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def report(dirname: str = "experiments/dryrun", fmt: str = "md"):
+    cells = load(dirname)
+    if not cells:
+        print(f"(no dry-run JSONs in {dirname} — run "
+              "`python -m repro.launch.dryrun --all --mesh both --out "
+              f"{dirname}` first)")
+        return []
+    if fmt == "md":
+        print("| arch | shape | mesh | compute s | memory s | coll s | "
+              "dominant | model/HLO flops | rf | HBM GiB | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("status") == "skipped":
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                  f"| skipped | — | — | — | — |")
+            continue
+        if c.get("status") != "ok":
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                  f"FAILED: {c.get('error','?')[:60]} |||||||||")
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+              f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+              f"| {r['collective_s']:.3e} | {r['dominant']} "
+              f"| {r.get('useful_flop_ratio', 0):.2f} "
+              f"| {r.get('roofline_fraction', 0):.3f} "
+              f"| {c['hbm_gib_per_chip']} | {c['fits_hbm']} |")
+    print()
+    doms = {}
+    for c in cells:
+        if c.get("status") == "ok":
+            doms.setdefault(c["roofline"]["dominant"], []).append(
+                f"{c['arch']}×{c['shape']}")
+    for d, items in doms.items():
+        print(f"**{d}-bound** ({len(items)}): move it down by — "
+              f"{NOTES[(d,)]}")
+    return cells
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    report(args.dir)

@@ -1,0 +1,35 @@
+"""Benchmark entrypoint: `python -m benchmarks.run`.
+
+1. paper_tables  — Fig. 8 / Fig. 9 reproduction over Table-I clones
+2. kernel_bench  — Pallas kernel microbenchmarks (interpret mode)
+3. roofline      — aggregates experiments/dryrun JSONs when present
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05,
+                    help="Table-I clone scale for paper tables")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables
+    print("=" * 72)
+    paper_tables.run(scale=args.scale)
+
+    if not args.skip_kernels:
+        print("=" * 72)
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+
+    print("=" * 72)
+    from benchmarks import roofline_report
+    roofline_report.report()
+
+
+if __name__ == "__main__":
+    main()

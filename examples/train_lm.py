@@ -1,0 +1,68 @@
+"""End-to-end driver (deliverable b): train a ~125M-parameter LM.
+
+The config is a scaled member of the qwen3 family (10 layers, d_model 640,
+GQA 10/2 heads, 50k vocab ⇒ ~125M params).  Defaults are sized for this
+CPU container (--steps 12); on real hardware raise --steps to a few hundred
+and --global-batch to taste — the loop, checkpointing and data pipeline are
+the production ones from repro.launch.train.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 12
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, synth_batch
+from repro.ft import checkpoint as ckpt
+from repro.models import lm
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+
+def lm_125m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-125m", family="dense",
+        n_layers=10, d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
+        d_ff=2560, vocab_size=50_304, qk_norm=True,
+        vocab_pad_multiple=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--micro-batches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = lm_125m()
+    print(f"config: {cfg.name}, params ≈ {cfg.param_count():,}")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=5,
+                           total_steps=max(args.steps, 100))
+    opt = init_opt_state(ocfg, params)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, args.micro_batches))
+
+    tokens_per_step = args.seq_len * args.global_batch
+    for s in range(args.steps):
+        t0 = time.perf_counter()
+        params, opt, m = step_fn(params, opt, synth_batch(dcfg, s))
+        dt = time.perf_counter() - t0
+        print(f"step {s:4d} loss={float(m['loss']):.4f} "
+              f"gnorm={float(m['grad_norm']):.2f} "
+              f"({tokens_per_step / dt:,.0f} tok/s)", flush=True)
+        if args.ckpt_dir and (s + 1) % 50 == 0:
+            ckpt.save(args.ckpt_dir, s + 1, {"params": params, "opt": opt})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""minitron-8b [dense]: pruned nemotron, GQA [arXiv:2407.14679]."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab_size=256_000,
+        train_microbatches=8,
+    )
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512, vocab_pad_multiple=64,
+        train_microbatches=1,
+    )

@@ -1,0 +1,32 @@
+"""Paper core: CSR containers, Gustavson row-wise product, the Maple PE
+event model, the four §IV accelerator configurations and the
+Accelergy-style energy/area model."""
+
+from repro.core.csr import CSR, BlockCSR
+from repro.core.gustavson import (
+    dense_oracle,
+    spmm_rowwise,
+    spmspm_rowwise,
+    spmspm_rowwise_scan,
+)
+from repro.core.maple import EventCounts, SpGEMMStats, analyze_spgemm
+from repro.core.dataflows import (
+    AccelConfig,
+    Comparison,
+    SimResult,
+    compare,
+    extensor_baseline,
+    extensor_maple,
+    matraptor_baseline,
+    matraptor_maple,
+    simulate,
+)
+from repro.core import energy, sparsity
+
+__all__ = [
+    "CSR", "BlockCSR", "spmm_rowwise", "spmspm_rowwise",
+    "spmspm_rowwise_scan", "dense_oracle", "EventCounts", "SpGEMMStats",
+    "analyze_spgemm", "AccelConfig", "SimResult", "Comparison", "simulate",
+    "compare", "matraptor_baseline", "matraptor_maple", "extensor_baseline",
+    "extensor_maple", "energy", "sparsity",
+]

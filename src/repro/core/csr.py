@@ -1,0 +1,200 @@
+"""Static-shape CSR / BSR containers usable as JAX pytrees.
+
+The paper (Maple, §II.B) operates on the classic three-vector CSR format:
+``value``, ``col_id``, ``row_ptr``.  JAX needs static shapes, so the
+containers here are *padded*: ``value``/``col_id`` are allocated at a fixed
+``nnz_max`` and ``nnz`` records the live prefix length.  Padding entries
+carry ``col_id = -1`` and ``value = 0`` so that padded lanes are harmless in
+arithmetic (0 contribution) and recognizable in metadata walks.
+
+``BlockCSR`` is the TPU-granularity lift of the same structure (DESIGN §3.1):
+the "non-zero" unit becomes a ``(bm, bk)`` block and ``col_id`` a block-column
+index.  It is the metadata format consumed by the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSR:
+    """Padded CSR matrix.  Shapes are static; ``nnz`` is traced."""
+
+    value: jax.Array    # (nnz_max,) float
+    col_id: jax.Array   # (nnz_max,) int32, -1 on padding
+    row_ptr: jax.Array  # (n_rows + 1,) int32
+    shape: Tuple[int, int]  # (n_rows, n_cols) — static aux data
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.value, self.col_id, self.row_ptr), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        value, col_id, row_ptr = children
+        return cls(value=value, col_id=col_id, row_ptr=row_ptr, shape=aux[0])
+
+    # -- basic properties ----------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_max(self) -> int:
+        return self.value.shape[0]
+
+    @property
+    def nnz(self) -> jax.Array:
+        return self.row_ptr[-1]
+
+    def row_lengths(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    # -- conversions ---------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense, nnz_max: int | None = None) -> "CSR":
+        """Host-side conversion (numpy); used by tests/benchmarks."""
+        dense = np.asarray(dense)
+        n_rows, n_cols = dense.shape
+        rows, cols = np.nonzero(dense)
+        nnz = rows.size
+        if nnz_max is None:
+            nnz_max = max(int(nnz), 1)
+        if nnz > nnz_max:
+            raise ValueError(f"nnz={nnz} exceeds nnz_max={nnz_max}")
+        value = np.zeros((nnz_max,), dtype=dense.dtype)
+        col_id = np.full((nnz_max,), -1, dtype=np.int32)
+        value[:nnz] = dense[rows, cols]
+        col_id[:nnz] = cols
+        row_ptr = np.zeros((n_rows + 1,), dtype=np.int32)
+        np.cumsum(np.bincount(rows, minlength=n_rows), out=row_ptr[1:])
+        return cls(
+            value=jnp.asarray(value),
+            col_id=jnp.asarray(col_id),
+            row_ptr=jnp.asarray(row_ptr),
+            shape=(n_rows, n_cols),
+        )
+
+    def to_dense(self) -> jax.Array:
+        """Device-side scatter back to dense (works under jit)."""
+        n_rows, n_cols = self.shape
+        # row id for every slot in the padded value array
+        slot = jnp.arange(self.nnz_max, dtype=jnp.int32)
+        row_of_slot = jnp.searchsorted(self.row_ptr[1:], slot, side="right")
+        row_of_slot = row_of_slot.astype(jnp.int32)
+        valid = self.col_id >= 0
+        col = jnp.where(valid, self.col_id, 0)
+        out = jnp.zeros((n_rows, n_cols), dtype=self.value.dtype)
+        contrib = jnp.where(valid, self.value, 0)
+        return out.at[row_of_slot, col].add(contrib)
+
+    def row_ids(self) -> jax.Array:
+        """(nnz_max,) int32 — the row index that owns each value slot."""
+        slot = jnp.arange(self.nnz_max, dtype=jnp.int32)
+        return jnp.searchsorted(self.row_ptr[1:], slot, side="right").astype(
+            jnp.int32
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSR:
+    """Padded block-CSR (BSR).  The TPU-granularity Maple metadata.
+
+    ``blocks[i]`` is the (bm, bk) dense payload of the i-th non-zero block in
+    row-major (by block-row) order; ``block_col[i]`` its block-column;
+    ``block_row[i]`` its block-row (redundant with row_ptr but what the
+    flattened-grid Pallas kernel prefetches); padding blocks have
+    ``block_col = -1`` and zero payload.
+    """
+
+    blocks: jax.Array     # (n_blocks_max, bm, bk)
+    block_col: jax.Array  # (n_blocks_max,) int32, -1 pad
+    block_row: jax.Array  # (n_blocks_max,) int32, row-sorted, pad rows = last
+    row_ptr: jax.Array    # (n_block_rows + 1,) int32
+    shape: Tuple[int, int]       # dense (M, K)
+    block_shape: Tuple[int, int]  # (bm, bk)
+
+    def tree_flatten(self):
+        children = (self.blocks, self.block_col, self.block_row, self.row_ptr)
+        return children, (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        blocks, block_col, block_row, row_ptr = children
+        return cls(blocks, block_col, block_row, row_ptr, aux[0], aux[1])
+
+    @property
+    def n_blocks_max(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @classmethod
+    def from_dense(cls, dense, block_shape: Tuple[int, int],
+                   n_blocks_max: int | None = None) -> "BlockCSR":
+        dense = np.asarray(dense)
+        m, k = dense.shape
+        bm, bk = block_shape
+        if m % bm or k % bk:
+            raise ValueError(f"dense {dense.shape} not divisible by {block_shape}")
+        gm, gk = m // bm, k // bk
+        tiles = dense.reshape(gm, bm, gk, bk).transpose(0, 2, 1, 3)
+        nz_mask = np.abs(tiles).sum(axis=(2, 3)) != 0  # (gm, gk)
+        rows, cols = np.nonzero(nz_mask)
+        nnzb = rows.size
+        if n_blocks_max is None:
+            n_blocks_max = max(int(nnzb), 1)
+        if nnzb > n_blocks_max:
+            raise ValueError(f"nnz blocks {nnzb} > n_blocks_max {n_blocks_max}")
+        blocks = np.zeros((n_blocks_max, bm, bk), dtype=dense.dtype)
+        block_col = np.full((n_blocks_max,), -1, dtype=np.int32)
+        # padding rows point at the last block row so revisit-accumulation in
+        # the flattened-grid kernel stays monotonic.
+        block_row = np.full((n_blocks_max,), max(gm - 1, 0), dtype=np.int32)
+        blocks[:nnzb] = tiles[rows, cols]
+        block_col[:nnzb] = cols
+        block_row[:nnzb] = rows
+        row_ptr = np.zeros((gm + 1,), dtype=np.int32)
+        np.cumsum(np.bincount(rows, minlength=gm), out=row_ptr[1:])
+        return cls(
+            blocks=jnp.asarray(blocks),
+            block_col=jnp.asarray(block_col),
+            block_row=jnp.asarray(block_row),
+            row_ptr=jnp.asarray(row_ptr),
+            shape=(m, k),
+            block_shape=(bm, bk),
+        )
+
+    def to_dense(self) -> jax.Array:
+        bm, bk = self.block_shape
+        gm, gk = self.n_block_rows, self.n_block_cols
+        valid = self.block_col >= 0
+        r = jnp.where(valid, self.block_row, 0)
+        c = jnp.where(valid, self.block_col, 0)
+        payload = jnp.where(valid[:, None, None], self.blocks, 0)
+        tiles = jnp.zeros((gm, gk, bm, bk), dtype=self.blocks.dtype)
+        tiles = tiles.at[r, c].add(payload)
+        return tiles.transpose(0, 2, 1, 3).reshape(gm * bm, gk * bk)
+
+    def density(self) -> float:
+        """Host-side block density (fraction of non-zero blocks)."""
+        nnzb = int(np.asarray(self.row_ptr)[-1])
+        return nnzb / (self.n_block_rows * self.n_block_cols)

@@ -1,0 +1,121 @@
+"""Gustavson's row-wise product (the paper's Eq. (1)-(7)) in pure JAX.
+
+Two entry points:
+
+* :func:`spmm_rowwise` — CSR ``A`` × dense ``B`` → dense ``C``.  Walks
+  ``A``'s metadata exactly as the Maple PE does: every non-zero ``A[i,k']``
+  selects row ``B[k',:]``, the product row is accumulated into the output row
+  (the PSB of Eq. (8)) — expressed as a gather + segment accumulation.
+
+* :func:`spmspm_rowwise` — CSR ``A`` × CSR ``B`` → dense ``C``.  The full
+  sparse×sparse case of the paper (``C = A×A`` protocol).  ``B``'s rows are
+  scattered through its own metadata (``j' = B.col_id[k']``, Eq. (6)).
+
+Both are jit-able, static-shape, and differentiable w.r.t. values.  They are
+the *oracles* for the Pallas kernels and the algorithmic core reused by the
+accelerator event model (`maple.py` counts what these loops would move).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSR
+
+
+def spmm_rowwise(a: CSR, b_dense: jax.Array) -> jax.Array:
+    """C[M,N] = A_csr[M,K] @ B[K,N] via row-wise product.
+
+    For each non-zero slot s of A (row i = row_ids[s], col k' = col_id[s]):
+        C[i, :] += A.value[s] * B[k', :]
+    which is one gather of a B row (BRB fill) and one PSB accumulation.
+    """
+    if a.shape[1] != b_dense.shape[0]:
+        raise ValueError(f"shape mismatch {a.shape} @ {b_dense.shape}")
+    rows = a.row_ids()                       # (nnz_max,)
+    valid = a.col_id >= 0
+    kprime = jnp.where(valid, a.col_id, 0)
+    b_rows = b_dense[kprime]                 # (nnz_max, N)  — BRB gather
+    scaled = b_rows * jnp.where(valid, a.value, 0)[:, None]
+    out = jnp.zeros((a.shape[0], b_dense.shape[1]), dtype=scaled.dtype)
+    return out.at[rows].add(scaled)          # PSB accumulate per output row
+
+
+def spmspm_rowwise(a: CSR, b: CSR) -> jax.Array:
+    """C[M,N] = A_csr @ B_csr → dense, both operands in CSR.
+
+    The j' scatter of Eq. (6): each non-zero pair (A[i,k'], B[k',j'])
+    contributes A.value * B.value into C[i, j'].  We expand over B's padded
+    slots once per A slot via a two-level formulation that stays static:
+    for every A-slot s we accumulate the *entire row* k' of B (as scattered
+    dense row), which is exactly what the Maple BRB+PSB does.
+    """
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    n, m = a.shape[0], b.shape[1]
+
+    # Dense rows of B materialized once (K, N) — acceptable at benchmark
+    # scale; the accelerator model never does this, it walks metadata.
+    b_dense = b.to_dense()
+    return spmm_rowwise(a, b_dense)
+
+
+def spmspm_rowwise_scan(a: CSR, b: CSR, row_chunk: int = 64) -> jax.Array:
+    """Memory-lean SpMSpM: scan over chunks of A rows, PSB per chunk.
+
+    Mirrors the accelerator's streaming schedule: only ``row_chunk`` PSB rows
+    are live at a time.  Used by the property tests to cross-check the
+    vectorized path and by large benchmark matrices.
+    """
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    n_rows = a.shape[0]
+    if n_rows % row_chunk:
+        raise ValueError(f"{n_rows=} not divisible by {row_chunk=}")
+    n_out = b.shape[1]
+
+    b_value, b_col, b_rptr = b.value, b.col_id, b.row_ptr
+    a_rows = a.row_ids()
+
+    def chunk_body(_, chunk_idx):
+        r0 = chunk_idx * row_chunk
+        psb = jnp.zeros((row_chunk, n_out), dtype=a.value.dtype)
+
+        # slots of A belonging to this row chunk
+        in_chunk = (a_rows >= r0) & (a_rows < r0 + row_chunk) & (a.col_id >= 0)
+        kprime = jnp.where(in_chunk, a.col_id, 0)
+        aval = jnp.where(in_chunk, a.value, 0)
+        local_row = jnp.where(in_chunk, a_rows - r0, 0)
+
+        # For each A slot, walk B row k' in fixed-width steps of its padded
+        # metadata.  We bound the inner walk by the max row length of B.
+        b_start = b_rptr[kprime]
+        b_len = b_rptr[kprime + 1] - b_start
+
+        max_len = b_value.shape[0]  # safe upper bound; loop is scanned
+
+        def inner(carry, t):
+            psb = carry
+            idx = b_start + t
+            live = (t < b_len) & in_chunk
+            idx = jnp.where(live, idx, 0)
+            jp = jnp.where(live, b_col[idx], 0)
+            contrib = jnp.where(live, aval * b_value[idx], 0)
+            psb = psb.at[local_row, jp].add(contrib)
+            return psb, None
+
+        # max_len can be large; scan keeps the HLO small.
+        psb, _ = jax.lax.scan(inner, psb, jnp.arange(max_len))
+        return None, psb
+
+    _, chunks = jax.lax.scan(
+        chunk_body, None, jnp.arange(n_rows // row_chunk)
+    )
+    return chunks.reshape(n_rows, n_out)
+
+
+def dense_oracle(a: CSR, b) -> jax.Array:
+    """Ground truth: densify and matmul."""
+    bd = b.to_dense() if isinstance(b, CSR) else b
+    return a.to_dense() @ bd

@@ -1,0 +1,231 @@
+"""Maple PE functional model + event counting (the paper's §III/§IV method).
+
+The paper evaluates Maple with Sparseloop/Accelergy: the accelerator is not
+cycle-simulated gate-by-gate, it is *event-counted* — how many MAC operations,
+buffer accesses and inter-level transfers a dataflow performs on a given
+sparse workload — and each event is priced with a per-access energy (Fig. 3)
+and a per-bit area (CACTI/Aladdin).  This module reproduces that methodology.
+
+Everything here is host-side numpy: these are analytics over CSR *metadata*
+(millions of non-zeros), vectorized, not device compute.  The algorithmic
+semantics (what the PE computes) are pinned by ``core.gustavson`` — the event
+model counts what those loops move.
+
+Terminology (paper §II/III):
+  ARB  — A-row buffer (non-zeros + col ids of the current A row)
+  BRB  — B-rows buffer (non-zeros of the rows B[k',:] selected by A.col_id)
+  PSB  — partial-sum buffer, 1×N register file addressed by j' = B.col_id[k']
+  P    — total partial products = Σ_{(i,k') ∈ nnz(A)} nnz(B[k',:])
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.core.csr import CSR
+
+
+# --------------------------------------------------------------------------
+# Workload statistics (pure metadata analytics)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMStats:
+    """Metadata-derived statistics of one C = A @ B row-wise product run."""
+
+    n_rows: int
+    n_cols: int
+    nnz_a: int
+    nnz_b: int
+    partial_products: int      # P: multiplies = accumulate ops
+    nnz_c: int                 # distinct output coordinates
+    a_row_len: np.ndarray      # (n_rows,) nnz per row of A
+    b_row_len: np.ndarray      # (n_rows_b,) nnz per row of B
+    # per A-row number of partial products (drives per-row PSB occupancy and
+    # the Matraptor merge analysis):
+    row_partials: np.ndarray   # (n_rows,)
+    # per A-row fiber count = nnz(A[i,:]) = number of sorted partial fibers
+    # that the Matraptor baseline must merge for output row i.
+    row_fibers: np.ndarray     # (n_rows,)
+    # how many times each B row is referenced = column histogram of A;
+    # drives the exact Σ ceil(len/m) compute-cycle count.
+    b_row_refs: np.ndarray     # (n_rows_b,)
+
+    @property
+    def avg_b_row_len(self) -> float:
+        referenced = self.b_row_len[self.b_row_len > 0]
+        return float(referenced.mean()) if referenced.size else 0.0
+
+    @property
+    def compaction(self) -> float:
+        """nnz_c / P — how much the accumulate phase compacts partials."""
+        return self.nnz_c / max(self.partial_products, 1)
+
+
+def _host(a) -> np.ndarray:
+    return np.asarray(a)
+
+
+def analyze_spgemm(a: CSR, b: CSR | None = None,
+                   exact_output: bool = True) -> SpGEMMStats:
+    """Walk CSR metadata of ``A`` (and ``B``; the paper uses B = A) and count
+    everything a row-wise product dataflow moves.
+
+    ``exact_output=True`` computes nnz(C) exactly by expanding the partial
+    coordinate list (vectorized, O(P) memory).  For very large P pass
+    ``False`` to use the standard upper-bound estimate ``min(P, rows*cols)``
+    discounted by the birthday-collision expectation.
+    """
+    if b is None:
+        b = a
+    a_rptr = _host(a.row_ptr).astype(np.int64)
+    a_cols = _host(a.col_id)
+    b_rptr = _host(b.row_ptr).astype(np.int64)
+    b_cols = _host(b.col_id)
+
+    nnz_a = int(a_rptr[-1])
+    nnz_b = int(b_rptr[-1])
+    a_cols = a_cols[:nnz_a].astype(np.int64)
+    a_row_len = np.diff(a_rptr)
+    b_row_len = np.diff(b_rptr)
+
+    # P: each non-zero A[i,k'] multiplies the whole row B[k',:]  (Eq. 3)
+    per_nnz_work = b_row_len[a_cols]                 # (nnz_a,)
+    partials = int(per_nnz_work.sum())
+
+    # per-row partial products: segment-sum of per_nnz_work by A row
+    a_row_of_nnz = np.repeat(np.arange(a_row_len.size), a_row_len)
+    row_partials = np.bincount(a_row_of_nnz, weights=per_nnz_work,
+                               minlength=a_row_len.size).astype(np.int64)
+
+    if exact_output and partials > 0:
+        # expand all (i, j') coordinates: j' = B.col_id[base + t]  (Eq. 6)
+        out_i = np.repeat(a_row_of_nnz, per_nnz_work)
+        starts = b_rptr[a_cols]                       # (nnz_a,)
+        # within-group offsets 0..len-1 for each A-nonzero's B row segment
+        cum = np.concatenate([[0], np.cumsum(per_nnz_work)[:-1]])
+        within = np.arange(partials, dtype=np.int64) - np.repeat(cum, per_nnz_work)
+        out_j = b_cols[np.repeat(starts, per_nnz_work) + within].astype(np.int64)
+        keys = out_i * b.shape[1] + out_j
+        nnz_c = int(np.unique(keys).size)
+    else:
+        # expectation under uniform hashing of P balls into rows*cols bins,
+        # computed per-row to respect row structure
+        n_out = b.shape[1]
+        with np.errstate(over="ignore"):
+            exp_row = n_out * (1.0 - np.exp(-row_partials / n_out))
+        nnz_c = int(exp_row.sum())
+
+    b_row_refs = np.bincount(a_cols, minlength=b_row_len.size).astype(np.int64)
+
+    return SpGEMMStats(
+        n_rows=a.shape[0], n_cols=b.shape[1],
+        nnz_a=nnz_a, nnz_b=nnz_b,
+        partial_products=partials, nnz_c=nnz_c,
+        a_row_len=a_row_len, b_row_len=b_row_len,
+        row_partials=row_partials, row_fibers=a_row_len.copy(),
+        b_row_refs=b_row_refs,
+    )
+
+
+# --------------------------------------------------------------------------
+# Event counters
+# --------------------------------------------------------------------------
+
+# every counter is "number of word-granular events" (one word = one value or
+# one metadata entry; C/D + IN are per-element operations)
+EVENT_KINDS = (
+    "mac",            # multiply-accumulate ops
+    "merge_op",       # comparator/merge ops (sort-based accumulate only)
+    "intersect_op",   # explicit intersection ops (baseline Extensor)
+    "cd_op",          # CSR compress/decompress ops at PE boundary
+    "l0_access",      # ARB/BRB/PSB or queue/PEB accesses (reg/FIFO level)
+    "pe_transfer",    # PE↔PE / NoC word transfers
+    "l1_access",      # SPM (SpAL/SpBL/LLB/POB) accesses
+    "l2_access",      # DRAM word transfers
+)
+
+
+class EventCounts(Dict[str, float]):
+    """A dict of event kind → count with arithmetic convenience."""
+
+    def __init__(self, **kw):
+        super().__init__({k: 0.0 for k in EVENT_KINDS})
+        for k, v in kw.items():
+            if k not in EVENT_KINDS:
+                raise KeyError(k)
+            self[k] = float(v)
+
+    def __add__(self, other: "EventCounts") -> "EventCounts":
+        out = EventCounts()
+        for k in EVENT_KINDS:
+            out[k] = self[k] + other[k]
+        return out
+
+    def scaled(self, f: float) -> "EventCounts":
+        out = EventCounts()
+        for k in EVENT_KINDS:
+            out[k] = self[k] * f
+        return out
+
+
+# --------------------------------------------------------------------------
+# The Maple PE schedule (compute-cycle model)
+# --------------------------------------------------------------------------
+
+def maple_pe_cycles(stats: SpGEMMStats, macs_per_pe: int, n_pes: int) -> float:
+    """Compute cycles for the Maple multiply+accumulate schedule.
+
+    The m MACs of a Maple PE drain the *pool of partial products of the
+    current A row* at up to m per cycle: every PSB register owns its own
+    adder (Fig. 7), so concurrently emitted products — even products that
+    target the same output column j' across different k' — accumulate
+    without a structural hazard.  An A row with p partial products therefore
+    takes ceil(p/m) cycles; utilization is p / (m·ceil(p/m)).
+
+    Rows are distributed over PEs (the spatial axis of every row-wise
+    product accelerator); a row is processed by one PE, so the largest
+    single row lower-bounds the schedule.
+    """
+    if stats.partial_products == 0:
+        return 0.0
+    per_row = np.ceil(stats.row_partials / macs_per_pe)
+    mean_shard = float(per_row.sum()) / n_pes
+    max_row = float(per_row.max(initial=0.0))
+    return max(mean_shard, max_row)
+
+
+def baseline_pe_cycles(stats: SpGEMMStats, n_pes: int,
+                       row_atomic: bool = True) -> float:
+    """Single-MAC PE: one partial product per cycle.
+
+    ``row_atomic=True`` (Matraptor) pins each A row to one PE, so the
+    heaviest row bounds the schedule; ``False`` (Extensor) lets the tiling
+    split a row's work across PEs.
+    """
+    if stats.partial_products == 0:
+        return 0.0
+    mean_shard = stats.partial_products / n_pes
+    if not row_atomic:
+        return mean_shard
+    max_row = float(stats.row_partials.max(initial=0.0))
+    return max(mean_shard, max_row)
+
+
+def matraptor_merge_passes(stats: SpGEMMStats, n_queues: int) -> np.ndarray:
+    """Sorting-queue rounds per output row for the baseline Matraptor.
+
+    Output row i receives ``fibers = nnz(A[i,:])`` sorted partial fibers.  A
+    PE with Q queues merges Q fibers per pass, so a row needs
+    ``ceil(log_Q(fibers))`` passes; every pass re-reads and re-writes each
+    surviving element through the queues (paper §IV.B: 'conduct the
+    accumulate operation repeatedly in a round-robin fashion').
+    """
+    fibers = np.maximum(stats.row_fibers, 1)
+    with np.errstate(divide="ignore"):
+        passes = np.ceil(np.log(fibers) / math.log(max(n_queues, 2)))
+    return np.maximum(passes, 1.0)

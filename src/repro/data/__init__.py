@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, synth_batch, data_iterator

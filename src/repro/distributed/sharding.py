@@ -1,0 +1,266 @@
+"""Logical-axis sharding rules (MaxText-style) + the `shard` activation hint.
+
+Model code never names mesh axes.  It tags activations with *logical* axis
+names (``shard(x, ("batch", "seq", "heads", None))``) and parameters are
+matched by *path pattern* (``spec_for_param``).  A context
+(:func:`use_mesh_rules`) binds logical names to physical mesh axes; outside
+the context every hint is a no-op, so smoke tests on 1 CPU device run the
+exact same model code the 512-chip dry-run lowers.
+
+Divisibility fallback: a logical axis is only mapped if the dimension is
+divisible by the product of the mesh axis sizes it maps to — otherwise the
+dimension stays replicated (recorded per-arch by the dry-run; e.g. 28 query
+heads on a 16-way `model` axis fall back to replication, and the MLP `mlp`
+axis carries the tensor parallelism instead).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Union[str, Tuple[str, ...], None]
+
+# default logical → mesh binding (single- and multi-pod; missing mesh axes
+# are dropped automatically, so "pod" is harmless on the single-pod mesh)
+DEFAULT_RULES: Mapping[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # replicated by default; prefill may use model
+    "kv_seq": ("model",),      # decode KV cache sequence axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": ("data",),        # FSDP axis for parameters
+    "embed_tp": ("model",),    # TP side of 2D-sharded giant params
+    "state": ("model",),       # SSM / RG-LRU width
+}
+
+
+# Inference rules: identical to DEFAULT_RULES except parameters are NOT
+# FSDP-sharded over `data` — serving has no optimizer state, so ZeRO-style
+# weight sharding only adds a per-layer all-gather to every decode step.
+# Weights live model-sharded (TP dims); `data` carries the batch only.
+INFERENCE_RULES: Mapping[str, Tuple[str, ...]] = dict(
+    DEFAULT_RULES, embed=(), embed_tp=("model",))
+
+
+# Weight-replicated sequence parallelism for *serving small models*
+# (prefill): activations shard their sequence over `model`, parameters are
+# replicated (no optimizer states at inference), and attention's KV
+# all-gather replaces the two TP all-reduces per layer — §Perf iteration 4.
+PREFILL_SP_RULES: Mapping[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "kv_seq": ("model",),
+    "heads": (),
+    "kv_heads": (),
+    "mlp": (),
+    "experts": ("model",),   # MoE experts still partition over model
+    "vocab": (),
+    "embed": (),
+    "embed_tp": (),
+    "state": (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Mapping[str, Tuple[str, ...]] = DEFAULT_RULES
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh],
+                   rules: Optional[Mapping[str, Tuple[str, ...]]] = None):
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh = mesh
+    _ctx.rules = dict(rules) if rules is not None else DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def _mesh_axes_for(logical: AxisNames, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Resolve one logical name to the mesh axes that exist on this mesh."""
+    if logical is None:
+        return None
+    names = (logical,) if isinstance(logical, str) else logical
+    out = []
+    for nm in names:
+        for ax in _ctx.rules.get(nm, ()):
+            if ax in mesh.shape:
+                out.append(ax)
+    return tuple(out) or None
+
+
+def _axes_size(axes: Optional[Tuple[str, ...]], mesh: Mesh) -> int:
+    if not axes:
+        return 1
+    size = 1
+    for ax in axes:
+        size *= mesh.shape[ax]
+    return size
+
+
+def logical_spec(dims: Sequence[AxisNames], shape: Sequence[int],
+                 mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    used = set()
+    spec = []
+    for logical, dim in zip(dims, shape):
+        axes = _mesh_axes_for(logical, mesh)
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axes_size(axes, mesh) == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def shard(x: jax.Array, dims: Sequence[AxisNames]) -> jax.Array:
+    """Activation sharding hint; identity when no mesh context is active."""
+    mesh = _ctx.mesh
+    if mesh is None:
+        return x
+    if len(dims) != x.ndim:
+        raise ValueError(f"{len(dims)} names for rank-{x.ndim} array")
+    spec = logical_spec(dims, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter rules (path-pattern → logical dims)
+# --------------------------------------------------------------------------
+
+# ordered: first match wins.  `*` entries refer to trailing dims; stacked
+# scan-group leading dims are detected by rank mismatch and get None.
+_PARAM_PATTERNS = (
+    ("embed_tokens", ("vocab", "embed")),
+    ("lm_head", ("vocab", "embed")),
+    ("wq", ("embed", "heads", None)),
+    ("wk", ("embed", "kv_heads", None)),
+    ("wv", ("embed", "kv_heads", None)),
+    ("wo", ("heads", None, "embed")),
+    ("w_gate", ("embed", "mlp")),
+    ("w_up", ("embed", "mlp")),
+    ("w_down", ("mlp", "embed")),
+    ("w_in", ("embed", "mlp")),
+    ("w_out", ("mlp", "embed")),
+    ("experts_gate", ("experts", "embed", None)),
+    ("experts_up", ("experts", "embed", None)),
+    ("experts_down", ("experts", None, "embed")),
+    ("router", ("embed", None)),
+    ("in_proj", ("embed", "state")),
+    ("out_proj", ("state", "embed")),
+    ("conv", (None, "state")),
+    ("lru_input", ("embed", "state")),
+    ("lru_a_gate", ("state", "state")),
+    ("lru_x_gate", ("state", "state")),
+    ("vis_proj", (None, "embed")),
+)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter, matched by its pytree path string."""
+    if len(shape) == 0:
+        return P()
+    for pat, dims in _PARAM_PATTERNS:
+        if pat in path:
+            if len(dims) < len(shape):
+                # stacked scan-group / expert leading dims: replicate them
+                dims = (None,) * (len(shape) - len(dims)) + tuple(dims)
+            elif len(dims) > len(shape):
+                dims = dims[-len(shape):]
+            return logical_spec(dims, shape, mesh)
+    return P()  # norms, biases, gates: replicated
+
+
+# --------------------------------------------------------------------------
+# decode-state (KV cache / recurrent state) rules
+# --------------------------------------------------------------------------
+
+_STATE_PATTERNS = (
+    ("cross_k", (None, "batch", "kv_seq", None, None)),
+    ("cross_v", (None, "batch", "kv_seq", None, None)),
+    ("k", (None, "batch", "kv_seq", None, None)),
+    ("v", (None, "batch", "kv_seq", None, None)),
+    ("conv", (None, "batch", None, "state")),
+    ("state", (None, "batch", "state", None, None)),
+    ("h", (None, "batch", "state")),
+)
+
+
+def spec_for_state(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one decode-state leaf (stacked (G, ...) caches).
+
+    KV caches shard batch over `data` and the cache sequence over `model`
+    (the flash-decode layout — softmax collectives are inserted by GSPMD);
+    recurrent states shard their width over `model`.
+    """
+    if len(shape) == 0:
+        return P()
+    leaf = path.rsplit("/", 1)[-1]
+    for pat, dims in _STATE_PATTERNS:
+        if leaf == pat or leaf.startswith(pat):
+            if len(dims) < len(shape):
+                dims = (None,) * (len(shape) - len(dims)) + tuple(dims)
+            elif len(dims) > len(shape):
+                dims = dims[-len(shape):]
+            return logical_spec(dims, shape, mesh)
+    return P()
+
+
+def state_shardings(state, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+        out.append(NamedSharding(
+            mesh, spec_for_state(path_str, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Input batch: leading dim is the global batch."""
+    def one(leaf):
+        dims = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, logical_spec(dims, leaf.shape, mesh))
+    return jax.tree_util.tree_map(one, batch)
+
+
+def param_shardings(params, mesh: Mesh):
+    """NamedSharding pytree for a parameter pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(k) for k in path)
+        out.append(NamedSharding(
+            mesh, spec_for_param(path_str, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def describe_param_shardings(params, mesh: Mesh) -> str:
+    """Human-readable sharding table (DESIGN/dry-run reporting)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    lines = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, 'key', k)) for k in path)
+        spec = spec_for_param(path_str, leaf.shape, mesh)
+        lines.append(f"{path_str:70s} {str(leaf.shape):24s} {spec}")
+    return "\n".join(lines)

@@ -1,0 +1,2 @@
+from repro.ft import checkpoint
+from repro.ft.straggler import StragglerConfig, StragglerMonitor, StepTimer

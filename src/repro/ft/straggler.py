@@ -1,0 +1,78 @@
+"""Straggler monitoring + restart policy hooks.
+
+On a real cluster every host reports its per-step wall time; hosts slower
+than ``p99 × tolerance`` for ``patience`` consecutive steps are flagged for
+preemption/replacement (the runbook action — e.g. via the cluster manager's
+drain API — is outside this library; the *detection* is here and unit-
+tested).  In this container a single process feeds the monitor, which is
+exactly what each host's agent would run.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 50           # sliding window of steps
+    tolerance: float = 1.5     # flag if slower than fleet median × tolerance
+    patience: int = 5          # consecutive slow steps before flagging
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.history: Dict[str, collections.deque] = {}
+        self.slow_streak: Dict[str, int] = collections.defaultdict(int)
+        self.flagged: List[str] = []
+
+    def record(self, host: str, step_seconds: float) -> None:
+        self.history.setdefault(
+            host, collections.deque(maxlen=self.cfg.window)
+        ).append(step_seconds)
+
+    def _baseline(self) -> Optional[float]:
+        """Fleet median — robust to the stragglers themselves (a pooled
+        p99 would absorb the outliers it is supposed to catch)."""
+        all_times = sorted(t for dq in self.history.values() for t in dq)
+        if len(all_times) < 10:
+            return None
+        return all_times[len(all_times) // 2]
+
+    def check(self) -> List[str]:
+        """Update streaks from the latest sample of each host; return newly
+        flagged hosts."""
+        base = self._baseline()
+        if base is None:
+            return []
+        newly = []
+        for host, dq in self.history.items():
+            if dq and dq[-1] > base * self.cfg.tolerance:
+                self.slow_streak[host] += 1
+            else:
+                self.slow_streak[host] = 0
+            if (self.slow_streak[host] >= self.cfg.patience
+                    and host not in self.flagged):
+                self.flagged.append(host)
+                newly.append(host)
+        return newly
+
+
+class StepTimer:
+    """Context helper: feeds wall time into the monitor."""
+
+    def __init__(self, monitor: StragglerMonitor, host: str):
+        self.monitor = monitor
+        self.host = host
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.monitor.record(self.host, time.perf_counter() - self.t0)
+        return False

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the Maple dataflow (validated with interpret=True
+on CPU; see each kernel's module docstring for the hardware mapping)."""
+
+from repro.kernels.ops import (
+    csr_to_ell,
+    local_block_attention,
+    maple_spmm,
+    maple_spmspm,
+    moe_expert_gemm,
+)
+
+__all__ = ["maple_spmm", "maple_spmspm", "moe_expert_gemm", "csr_to_ell",
+           "local_block_attention"]

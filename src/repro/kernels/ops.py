@@ -1,0 +1,142 @@
+"""Public jit'd entry points for the Maple kernels.
+
+These wrappers own everything that is *not* the kernel: metadata
+construction, padding to tile multiples, empty-row masking, format
+conversion, and the interpret-mode switch (True on CPU — this container —
+so the kernel bodies execute in Python for validation; False on real TPU).
+
+API:
+  * :func:`maple_spmm`       — BlockCSR A × dense B      (MXU grain)
+  * :func:`maple_spmspm`     — padded-CSR A × CSR/dense B (element grain)
+  * :func:`moe_expert_gemm`  — expert-sorted tokens × stacked expert weights
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CSR, BlockCSR
+from repro.kernels.block_attn import (block_attention_pallas,
+                                      local_window_kv_map)
+from repro.kernels.maple_spmm import maple_spmm_pallas
+from repro.kernels.maple_spmspm import maple_spmspm_pallas
+from repro.kernels.moe_gemm import moe_gemm_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# BSR × dense
+# --------------------------------------------------------------------------
+
+def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """C = A_bsr @ B with the Maple block dataflow.
+
+    Empty block-rows never flush their PSB, so their output tiles are
+    explicitly zero-masked from the (host-static) row_ptr metadata.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    m = a.shape[0]
+    bm = a.block_shape[0]
+    out = maple_spmm_pallas(
+        a.blocks, a.block_row, a.block_col, b_dense,
+        m=m, bn=bn, interpret=interpret,
+    )
+    # mask tiles of block-rows that own no non-zero block
+    row_len = a.row_ptr[1:] - a.row_ptr[:-1]            # (gm,)
+    mask = jnp.repeat(row_len > 0, bm)                  # (M,)
+    return jnp.where(mask[:, None], out, 0)
+
+
+# --------------------------------------------------------------------------
+# element-granular CSR × CSR (paper protocol C = A×A)
+# --------------------------------------------------------------------------
+
+def csr_to_ell(a: CSR, max_row_len: int | None = None):
+    """Host-side CSR → ELL regularization (values/cols as (M, L))."""
+    rptr = np.asarray(a.row_ptr)
+    vals = np.asarray(a.value)
+    cols = np.asarray(a.col_id)
+    m = a.shape[0]
+    lens = np.diff(rptr)
+    nnz = int(rptr[-1])
+    lmax = int(lens.max(initial=1)) if max_row_len is None else max_row_len
+    lmax = max(lmax, 1)
+    ell_v = np.zeros((m, lmax), dtype=vals.dtype)
+    ell_c = np.full((m, lmax), -1, dtype=np.int32)
+    idx = np.arange(nnz)
+    row = np.repeat(np.arange(m), lens)
+    offs = idx - np.repeat(rptr[:-1], lens)
+    keep = offs < lmax
+    ell_v[row[keep], offs[keep]] = vals[:nnz][keep]
+    ell_c[row[keep], offs[keep]] = cols[:nnz][keep]
+    return jnp.asarray(ell_v), jnp.asarray(ell_c)
+
+
+def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:
+    """C = A_csr @ B via the element-granular Maple walk.
+
+    ``b`` may be a CSR (densified to row-addressable panels — what the BRB
+    sees after its fill) or an already-dense (K, N) array.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    values, col_ids = csr_to_ell(a)
+    b_rows = b.to_dense() if isinstance(b, CSR) else b
+    return maple_spmspm_pallas(values, col_ids, b_rows, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# MoE grouped GEMM
+# --------------------------------------------------------------------------
+
+def moe_expert_gemm(x_sorted: jax.Array, group_sizes: jax.Array,
+                    w: jax.Array, *, bt: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """y[t] = x[t] @ w[expert(t)] for expert-sorted tokens.
+
+    ``group_sizes`` must already be multiples of ``bt`` (capacity-padded —
+    the MoE layer pads each expert's segment with zero rows).  Static expert
+    count and T; the tile→expert map is computed with jnp (works under jit).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    t, _ = x_sorted.shape
+    n_tiles = t // bt
+    # expert of each tile: searchsorted over the group offsets
+    offsets = jnp.cumsum(group_sizes)                  # (E,)
+    tile_starts = jnp.arange(n_tiles, dtype=group_sizes.dtype) * bt
+    expert_of_tile = jnp.searchsorted(offsets, tile_starts, side="right")
+    expert_of_tile = expert_of_tile.astype(jnp.int32)
+    return moe_gemm_pallas(
+        x_sorted, expert_of_tile, w, bt=bt, interpret=interpret
+    )
+
+
+# --------------------------------------------------------------------------
+# block-sparse local attention
+# --------------------------------------------------------------------------
+
+def local_block_attention(q, k, v, *, window: int, bq: int = 128,
+                          bk: int = 128, interpret: bool | None = None):
+    """Causal local-window attention with banded-BSR tile skipping.
+
+    q/k/v: (B, S, H, hd).  Tiles outside the window band are never fetched
+    (the Maple zero-block skip); within-band masking is elementwise.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    s = q.shape[1]
+    kv_map = jnp.asarray(local_window_kv_map(s, window, bq, bk))
+    fn = lambda qq, kk, vv: block_attention_pallas(
+        qq, kk, vv, kv_map, bq=bq, bk=bk, causal=True, window=window,
+        interpret=interpret)
+    return jax.vmap(fn)(q, k, v)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes the same contraction as its kernel twin using only
+``jnp`` ops (no pallas), at f32 accumulation precision, and is the reference
+the per-kernel sweep tests ``assert_allclose`` against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(blocks: jax.Array, block_row: jax.Array, block_col: jax.Array,
+             b_dense: jax.Array, *, m: int) -> jax.Array:
+    """BSR × dense reference: scatter blocks to dense A, then matmul."""
+    n_blocks, bm, bk = blocks.shape
+    k, n = b_dense.shape
+    gm, gk = m // bm, k // bk
+    valid = block_col >= 0
+    r = jnp.where(valid, block_row, 0)
+    c = jnp.where(valid, block_col, 0)
+    payload = jnp.where(valid[:, None, None], blocks, 0)
+    tiles = jnp.zeros((gm, gk, bm, bk), dtype=jnp.float32)
+    tiles = tiles.at[r, c].add(payload.astype(jnp.float32))
+    a_dense = tiles.transpose(0, 2, 1, 3).reshape(m, k)
+    out = a_dense @ b_dense.astype(jnp.float32)
+    return out.astype(b_dense.dtype)
+
+
+def spmspm_ref(values: jax.Array, col_ids: jax.Array,
+               b_rows: jax.Array) -> jax.Array:
+    """ELL × row-addressable-B reference (Eq. (3)–(8) vectorized)."""
+    m, slots = values.shape
+    valid = col_ids >= 0
+    cols = jnp.where(valid, col_ids, 0)
+    vals = jnp.where(valid, values, 0).astype(jnp.float32)
+    gathered = b_rows.astype(jnp.float32)[cols]        # (M, L, N) BRB fills
+    out = jnp.einsum("ml,mln->mn", vals, gathered)     # PSB accumulate
+    return out.astype(values.dtype)
+
+
+def moe_gemm_ref(x: jax.Array, expert_of_tile: jax.Array, w: jax.Array,
+                 *, bt: int) -> jax.Array:
+    """Grouped GEMM reference: per-token expert gather, then batched dot."""
+    t, d = x.shape
+    expert_of_token = jnp.repeat(expert_of_tile, bt)   # (T,)
+    w_tok = w[expert_of_token]                         # (T, D, F)
+    out = jnp.einsum(
+        "td,tdf->tf", x.astype(jnp.float32), w_tok.astype(jnp.float32)
+    )
+    return out.astype(x.dtype)
+
+
+def local_attention_ref(q, k, v, *, window: int) -> jax.Array:
+    """Dense causal local-window attention oracle.  q/k/v: (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = (qp >= kp) & ((qp - kp) < window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

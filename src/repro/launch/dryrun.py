@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) on the production meshes and extract the
+memory/cost/collective evidence for EXPERIMENTS §Dry-run / §Roofline.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) — the
+two lines above override the platform device count before any jax import,
+which is why they precede everything, including the docstring's imports.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.distributed.sharding import (INFERENCE_RULES, PREFILL_SP_RULES,
+                                        batch_shardings, param_shardings,
+                                        state_shardings, use_mesh_rules)
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.roofline import analysis as roofline
+from repro.roofline import jaxpr_cost
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+BF16 = jnp.bfloat16
+HBM_PER_CHIP = 16 * 2 ** 30     # v5e: 16 GiB
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_overrides=None, cfg_overrides=None, rules=None):
+    """Lower + compile one (arch × shape × mesh) cell; return report dict."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "status": "ok",
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        report["status"] = "skipped"
+        report["reason"] = why
+        return report
+
+    t0 = time.time()
+    # NOTE: INFERENCE_RULES (model-only weight sharding, no per-layer
+    # weight all-gathers) is available via --rules infer, but on the CPU
+    # dry-run backend XLA hoists f32 upcasts of the full weight stack out
+    # of the decode loop (no native bf16 dots), inflating memory 3×; the
+    # default ZeRO-3-style sharding is used for the reported cells.
+    key = jax.random.PRNGKey(0)
+    params_abs = _abstract(lambda k: lm.init_params(cfg, k, dtype=BF16), key)
+    with use_mesh_rules(mesh, rules):
+        p_shard = param_shardings(params_abs, mesh)
+        batch_abs = input_specs(cfg, shape, dtype=BF16)
+        b_shard = batch_shardings(batch_abs, mesh)
+
+    with use_mesh_rules(mesh, rules):
+        if shape.kind == "train":
+            odefaults = {"m_dtype": BF16} if cfg.bf16_first_moment else {}
+            odefaults.update(opt_overrides or {})
+            ocfg = OptimizerConfig(**odefaults)
+            opt_abs = _abstract(
+                lambda p: init_opt_state(ocfg, p), params_abs)
+            o_shard = param_shardings(opt_abs, mesh)
+            step = make_train_step(cfg, ocfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            gcost = jaxpr_cost.jaxpr_cost(step, params_abs, opt_abs,
+                                          batch_abs)
+        elif shape.kind == "prefill":
+            fn = functools.partial(lm.prefill, cfg=cfg,
+                                   max_seq=shape.seq_len)
+            # explicit output shardings: the emitted KV caches/states must
+            # land sharded (batch→data, cache seq→model), or XLA replicates
+            # them (29 GiB on qwen2-7b prefill — §Perf memory fix)
+            logits_abs, state_out_abs = jax.eval_shape(
+                lambda p, b: fn(p, batch=b), params_abs, batch_abs)
+            out_sh = (batch_shardings(logits_abs, mesh),
+                      state_shardings(state_out_abs, mesh))
+            jitted = jax.jit(lambda p, b: fn(p, batch=b),
+                             in_shardings=(p_shard, b_shard),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, batch_abs)
+            gcost = jaxpr_cost.jaxpr_cost(lambda p, b: fn(p, batch=b),
+                                          params_abs, batch_abs)
+        else:  # decode
+            state_abs = _abstract(
+                lambda: lm.init_decode_state(cfg, shape.global_batch,
+                                             shape.seq_len, dtype=BF16))
+            s_shard = state_shardings(state_abs, mesh)
+            step_fn = lambda p, st, tok: lm.decode_step(p, cfg, st, tok)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, s_shard, b_shard["tokens"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, state_abs,
+                                   batch_abs["tokens"])
+            gcost = jaxpr_cost.jaxpr_cost(step_fn, params_abs, state_abs,
+                                          batch_abs["tokens"])
+
+        compiled = lowered.compile()
+
+    report["lower_compile_s"] = round(time.time() - t0, 1)
+
+    mem = roofline.memory_report(compiled)
+    report["memory"] = mem
+    report["fits_hbm"] = mem.get("total_hbm_bytes", 0) <= HBM_PER_CHIP
+    report["hbm_gib_per_chip"] = round(
+        mem.get("total_hbm_bytes", 0) / 2 ** 30, 2)
+
+    hlo = compiled.as_text()
+    rl = roofline.analyze(compiled, hlo, chips, global_cost=gcost)
+    active = cfg.param_count(active_only=True)
+    mflops = roofline.model_flops(cfg, shape, active)
+    report["roofline"] = rl.summary(model_flops_global=mflops)
+    report["active_params"] = active
+    report["total_params"] = cfg.param_count()
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="use the shard_map all-to-all EP MoE path")
+    ap.add_argument("--rules", choices=("default", "sp", "infer"),
+                    default="default",
+                    help="sp = weight-replicated sequence parallelism; "
+                         "infer = model-only weight sharding (no FSDP)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (ints/floats/str)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.moe_ep:
+        overrides["moe_impl"] = "ep_a2a"
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                try:
+                    rep = lower_cell(
+                        arch, shape, multi,
+                        cfg_overrides=overrides or None,
+                        rules=({"sp": PREFILL_SP_RULES,
+                                "infer": INFERENCE_RULES}.get(args.rules)))
+                except Exception as e:  # a failure here is a system bug
+                    rep = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                results.append(rep)
+                status = rep["status"]
+                extra = ""
+                if status == "ok":
+                    r = rep["roofline"]
+                    extra = (f" hbm={rep['hbm_gib_per_chip']}GiB "
+                             f"dom={r['dominant']} "
+                             f"step={r['step_time_s']:.3e}s "
+                             f"rf={r.get('roofline_fraction', 0):.3f} "
+                             f"[{rep['lower_compile_s']}s]")
+                elif status == "skipped":
+                    extra = f" ({rep['reason'][:60]}...)"
+                else:
+                    extra = f" {rep.get('error', '')[:120]}"
+                print(f"{tag:60s} {status}{extra}", flush=True)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = tag.replace("|", "_") + ".json"
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(rep, f, indent=1, default=str)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{n_fail} FAILED")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: unified LM covering all assigned architectures."""
+from repro.models import layers, lm, moe, rglru, ssm
+__all__ = ["layers", "lm", "moe", "rglru", "ssm"]

@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)  is linear in
+h, so the full-sequence path uses ``jax.lax.associative_scan`` (log-depth,
+parallel over the sequence) and decode keeps an O(d) hidden state — this is
+what makes `long_500k` run for the hybrid arch.
+
+Block structure (Griffin recurrent block): two input branches
+(linear → causal conv → RG-LRU) × (linear → GeLU), merged multiplicatively,
+then an output projection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+    c_exponent: float = 8.0
+
+
+def init_rglru(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d, w = cfg.d_model, cfg.lru_width
+    # Λ init so that a = sigmoid(Λ)^c is spread over (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / cfg.c_exponent) /
+                  (1 - u ** (1.0 / cfg.c_exponent)))
+    return {
+        "lru_input": dense_init(ks[1], (d, w), d, dtype),
+        "gate_branch": dense_init(ks[2], (d, w), d, dtype),
+        "conv": dense_init(ks[3], (cfg.conv_width, w), cfg.conv_width, dtype),
+        "lru_a_gate": dense_init(ks[4], (w, w), w, dtype),
+        "lru_x_gate": dense_init(ks[5], (w, w), w, dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (w, d), w, dtype),
+    }
+
+
+def _rg_lru_gates(p, cfg: RGLRUConfig, x):
+    """x: (..., W) → (log_a, gated_input) both f32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x32,
+                                  p["lru_a_gate"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x32,
+                                  p["lru_x_gate"].astype(jnp.float32)))
+    log_a = -cfg.c_exponent * r * jax.nn.softplus(p["lambda"])
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * x32)
+    return log_a, gated
+
+
+def rg_lru_scan(log_a, gated):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (seq)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    del la
+    return h
+
+
+def rglru_block(p, cfg: RGLRUConfig, x, *, return_state: bool = False):
+    """Full-sequence recurrent block.  x: (B, S, D) → (B, S, D)
+    (+ optional (conv_state, h_last) for decode continuation)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["gate_branch"]))
+
+    u_raw = jnp.einsum("bsd,dw->bsw", x, p["lru_input"])
+    u_raw = shard(u_raw, ("batch", "seq", "state"))
+    # causal depthwise conv
+    width = p["conv"].shape[0]
+    pad = jnp.zeros((u_raw.shape[0], width - 1, u_raw.shape[2]), u_raw.dtype)
+    up = jnp.concatenate([pad, u_raw], axis=1)
+    u = sum(up[:, i:i + x.shape[1], :] * p["conv"][i][None, None, :]
+            for i in range(width))
+
+    log_a, gated = _rg_lru_gates(p, cfg, u)
+    h = rg_lru_scan(log_a, gated)
+
+    y = h.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"])
+    if return_state:
+        conv_state = up[:, -(width - 1):, :] if width > 1 else None
+        return out, (conv_state, h[:, -1])
+    return out
+
+
+def rglru_decode_step(p, cfg: RGLRUConfig, x, conv_state, h_prev):
+    """One-token decode.  x: (B, 1, D); conv_state: (B, W-1, lru_width);
+    h_prev: (B, lru_width) f32.  Returns (y, conv_state, h)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["gate_branch"]))
+
+    u = jnp.einsum("bsd,dw->bsw", x, p["lru_input"])
+    xp = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    width = p["conv"].shape[0]
+    conv_state = xp[:, -(width - 1):, :]
+    u = sum(xp[:, -width + i:, :][:, :1, :] * p["conv"][i][None, None, :]
+            for i in range(width))
+
+    log_a, gated = _rg_lru_gates(p, cfg, u[:, 0])
+    h = jnp.exp(log_a) * h_prev + gated
+    y = (h[:, None, :].astype(x.dtype)) * gate
+    return jnp.einsum("bsw,wd->bsd", y, p["out_proj"]), conv_state, h
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32):
+    return (
+        jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    )

@@ -1,0 +1,232 @@
+"""Mamba-2 block: SSD (state-space duality) chunked algorithm, pure JAX.
+
+The SSD scan (Dao & Gu, arXiv:2405.21060) computes the selective-SSM output
+in chunks: quadratic attention-like math *within* a chunk (MXU-friendly) and
+a linear recurrence *across* chunk states — sub-quadratic overall, which is
+what makes the `long_500k` decode shape feasible (decode state is O(1) in
+sequence length).
+
+Shapes follow the paper: ``d_inner = 2·d_model``, heads of size ``headdim``,
+single B/C group, state size N.  The decode path carries
+``(conv_state, ssm_state)`` and costs O(d_inner·N) per token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    conv_width: int = 4
+    chunk: int = 256
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def init_ssm(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), d, dtype),
+        "conv": dense_init(ks[1], (cfg.conv_width, di + 2 * n),
+                           cfg.conv_width, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _segsum(x):
+    """(..., q) → (..., q, q) lower-triangular segment sums:
+    out[i, j] = sum_{k in (j, i]} x[k]  (−inf above the diagonal)."""
+    q = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _ssd_scan_impl(x, dt, a_log, b, c, *, chunk: int):
+    """The SSD chunked scan (named jit region: the roofline walker charges
+    boundary I/O only — the Pallas-kernelizable hot loop).
+
+    x:  (B, S, H, P) — inputs per head
+    dt: (B, S, H)    — softplus'd step sizes
+    a_log: (H,)      — log decay rates (A = -exp(a_log))
+    b, c: (B, S, N)  — input/output projections (single group)
+    Returns y: (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if s % chunk:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    nc = s // chunk
+
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    b = b.astype(f32)
+    c = c.astype(f32)
+    a = -jnp.exp(a_log.astype(f32))                       # (H,) negative
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a                                          # (B,nc,q,H) log-decay
+    da_h = da.transpose(0, 1, 3, 2)                       # (B,nc,H,q)
+    da_cum = jnp.cumsum(da_h, axis=-1)                    # within-chunk cumsum
+    da_tot = da_cum[..., -1]                              # (B,nc,H)
+
+    xdt = xc * dtc[..., None]                             # (B,nc,q,H,P)
+
+    # ---- intra-chunk (quadratic within chunk, runs on the MXU) ------------
+    ell = jnp.exp(_segsum(da_h))                          # (B,nc,H,q,q)
+    y_intra = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp",
+                         cc, bc, ell, xdt)
+
+    # ---- chunk boundary states --------------------------------------------
+    decay_to_end = jnp.exp(da_tot[..., None] - da_cum)    # (B,nc,H,q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_to_end, xdt)
+
+    # ---- inter-chunk linear recurrence over chunk states -------------------
+    def step(prev, inp):
+        st, dtot = inp
+        new = prev * jnp.exp(dtot)[..., None, None] + st  # (B,H,P,N)
+        return new, prev                                  # emit state *before*
+
+    init = jnp.zeros((bsz, h, p, n), f32)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), da_tot.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(da_cum)                    # (B,nc,H,q)
+    y_inter = jnp.einsum("bcin,bchpn,bchi->bcihp",
+                         cc, prev_states, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_scan(x, dt, a_log, b, c, *, chunk: int):
+    return _ssd_scan_impl(x, dt, a_log, b, c, chunk=chunk)
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (W, C).
+    If conv_state (B, W-1, C) is given, runs one-step decode mode."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(width - 1):, :] if width > 1 else None
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(width - 1):, :]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out, new_state
+
+
+def _split_proj(zxbcdt, cfg: SSMConfig):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def ssm_block(p, cfg: SSMConfig, x, *, return_state: bool = False):
+    """Full-sequence Mamba-2 block.  x: (B, S, D) → (B, S, D)
+    (+ optional (conv_state, ssm_state) for decode continuation)."""
+    bsz, s, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc_raw, p["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    xs = shard(xs, ("batch", "seq", "state"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(bsz, s, h, pd)
+    chunk = s if s < cfg.chunk else cfg.chunk
+    y, final_state = ssd_scan(xh, dt, p["a_log"], b, c, chunk=chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"]["scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        return out, (conv_state, final_state)
+    return out
+
+
+def ssm_decode_step(p, cfg: SSMConfig, x, conv_state, ssm_state):
+    """One-token decode.  x: (B, 1, D); conv_state: (B, W-1, di+2n);
+    ssm_state: (B, H, P, N) f32.  Returns (y, conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    b = xbc[:, 0, di:di + n].astype(jnp.float32)           # (B, N)
+    c = xbc[:, 0, di + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])                               # (H,)
+    xh = xs[:, 0].reshape(bsz, h, pd).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a)                                # (B, H)
+    drive = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b)
+    ssm_state = ssm_state * decay[..., None, None] + drive
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"]["scale"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), conv_state, ssm_state
+
+
+def init_ssm_state(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return (
+        jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.d_state),
+                  dtype),
+        jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                  jnp.float32),
+    )

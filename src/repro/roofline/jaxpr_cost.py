@@ -1,0 +1,206 @@
+"""Trip-count-aware FLOP/byte accounting by walking the jaxpr.
+
+Why: XLA's ``compiled.cost_analysis()`` counts a ``while``/``scan`` body
+ONCE regardless of trip count (verified in EXPERIMENTS §Dry-run), which
+under-reports a scanned 80-layer model by ~80×.  The jaxpr still has the
+static scan lengths, so walking it gives exact *global* (pre-partition)
+FLOPs — the numerator the roofline formula wants.
+
+Byte convention (documented, reproducible): traffic is charged only at
+*materialization points* — dot/conv operands+results, gather/scatter,
+reduce, sort, RNG, and scan carries (2× per step) — elementwise chains are
+assumed fully fused into their neighbors.  This approximates post-fusion
+HBM traffic far better than summing every eqn, and its bias is uniform
+across architectures and perf iterations (what matters for hillclimbing).
+
+Elementwise FLOPs are counted 1/element (transcendentals too — they're VPU
+ops, not MXU); dots dominate every model here anyway.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import reduce
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core
+
+
+def _nelems(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _nbytes(aval) -> int:
+    try:
+        return _nelems(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "erf", "rsqrt", "sqrt", "neg", "abs", "sign", "floor",
+    "ceil", "round", "is_finite", "and", "or", "not", "xor", "select_n",
+    "convert_element_type", "integer_pow", "exp2", "log1p", "expm1",
+    "clamp", "nextafter", "sin", "cos", "square", "cumsum", "cumlogsumexp",
+    "cummax", "cumprod", "eq", "ne", "lt", "le", "gt", "ge", "rem",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+}
+
+_MATERIALIZING = {
+    "gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+    "dynamic_update_slice", "sort", "reduce_sum", "reduce_max",
+    "reduce_min", "reduce_prod", "reduce_and", "reduce_or", "argmax",
+    "argmin", "top_k", "iota", "broadcast_in_dim", "reshape", "transpose",
+    "concatenate", "pad", "rev", "squeeze", "slice", "random_bits",
+    "threefry2x32", "rng_bit_generator",
+}
+
+# transpose/reshape/broadcast are usually layout no-ops after fusion —
+# charge their bytes at a discount
+_CHEAP_MOVERS = {"reshape", "transpose", "broadcast_in_dim", "squeeze",
+                 "slice"}
+
+
+def _dot_flops(eqn) -> int:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = reduce(int.__mul__, (lhs.shape[d] for d in lb), 1)
+    contract = reduce(int.__mul__, (lhs.shape[d] for d in lc), 1)
+    lhs_free = _nelems(lhs) // max(batch * contract, 1)
+    rhs_free = _nelems(rhs) // max(batch * contract, 1)
+    return 2 * batch * contract * lhs_free * rhs_free
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    return 2 * _nelems(out) * _nelems(rhs) // max(rhs.shape[-1], 1)
+
+
+class Cost:
+    __slots__ = ("flops", "bytes")
+
+    def __init__(self, flops=0.0, nbytes=0.0):
+        self.flops = flops
+        self.bytes = nbytes
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+# Named jit regions whose interior stays in VMEM on the TPU target (they
+# are the Pallas-kernelizable hot loops — flash attention fwd/bwd, the SSD
+# chunk scan).  Their FLOPs count fully but HBM bytes are charged at the
+# REGION BOUNDARY only (operands + results), exactly like the fused Pallas
+# kernel they model (DESIGN §7: the PSB never leaves VMEM).
+FUSED_REGIONS = ("_flash_forward_impl", "_flash_backward_impl",
+                 "_ssd_scan_impl")
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    """Yield (closed_jaxpr, multiplier) for every sub-jaxpr of an eqn."""
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr"):
+        if key in params and params[key] is not None:
+            yield params[key], 1.0
+    if "branches" in params:        # cond: charge the most expensive branch
+        yield None, 0.0              # sentinel handled by caller
+
+
+def _walk(jaxpr, acc: Cost, count_bytes: bool = True) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        out_elems = sum(_nelems(v.aval) for v in eqn.outvars)
+        out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_nbytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        b = 1.0 if count_bytes else 0.0
+
+        if prim == "dot_general":
+            acc.flops += _dot_flops(eqn)
+            acc.bytes += b * (in_bytes + out_bytes)
+        elif prim == "conv_general_dilated":
+            acc.flops += _conv_flops(eqn)
+            acc.bytes += b * (in_bytes + out_bytes)
+        elif prim == "scan":
+            inner = Cost()
+            _walk(eqn.params["jaxpr"].jaxpr, inner, count_bytes)
+            length = eqn.params["length"]
+            acc.flops += inner.flops * length
+            acc.bytes += inner.bytes * length
+            # carry traffic is charged by the body's own ops (reads of the
+            # carried tensors, slice updates) — a blanket 2×carry×length
+            # double-counts and misprices in-place DUS cache carries
+        elif prim == "while":
+            inner = Cost()
+            _walk(eqn.params["body_jaxpr"].jaxpr, inner, count_bytes)
+            # trip count unknown statically: charge once, flag via name
+            acc.flops += inner.flops
+            acc.bytes += inner.bytes
+        elif prim == "cond":
+            worst = Cost()
+            for br in eqn.params["branches"]:
+                c = Cost()
+                _walk(br.jaxpr, c, count_bytes)
+                if c.flops > worst.flops:
+                    worst = c
+            acc += worst
+        elif prim in ("pjit", "closed_call", "core_call", "remat2",
+                      "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "custom_jvp_call_jaxpr"):
+            fused = (prim == "pjit"
+                     and str(eqn.params.get("name", "")) in FUSED_REGIONS)
+            if fused and count_bytes:
+                # Pallas-kernelizable region: charge boundary I/O only
+                acc.bytes += in_bytes + out_bytes
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                sub = eqn.params.get(key)
+                if sub is not None:
+                    _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, acc,
+                          count_bytes and not fused)
+                    break
+        elif prim in _ELEMENTWISE:
+            acc.flops += out_elems
+        elif prim in _CHEAP_MOVERS:
+            acc.bytes += b * 0.25 * out_bytes
+        elif prim in ("dynamic_slice", "gather"):
+            # reads only the sliced/gathered region ≈ output size
+            acc.flops += out_elems
+            acc.bytes += b * 2.0 * out_bytes
+        elif prim == "dynamic_update_slice":
+            # in-place: touches only the update operand's region
+            upd = _nbytes(eqn.invars[1].aval)
+            acc.flops += out_elems * 0
+            acc.bytes += b * 2.0 * upd
+        elif prim in ("scatter", "scatter-add", "scatter_add"):
+            upd = _nbytes(eqn.invars[-1].aval)
+            acc.flops += _nelems(eqn.invars[-1].aval)
+            acc.bytes += b * 3.0 * upd      # read+write region + updates
+        elif prim in _MATERIALIZING:
+            acc.flops += out_elems          # 1 op/elem (address math etc.)
+            acc.bytes += b * (in_bytes + out_bytes)
+        else:
+            # conservative default: elementwise-ish
+            acc.flops += out_elems
+    # jaxpr-level constants are read once
+    if count_bytes:
+        acc.bytes += sum(_nbytes(v.aval) for v in jaxpr.constvars)
+
+
+def jaxpr_cost(fn, *abstract_args, **abstract_kwargs) -> Cost:
+    """Global (pre-partition) flops/bytes of fn on the given abstract args."""
+    closed = jax.make_jaxpr(fn)(*abstract_args, **abstract_kwargs)
+    acc = Cost()
+    _walk(closed.jaxpr, acc)
+    return acc

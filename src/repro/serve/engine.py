@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + sampling decode loop.
+
+`generate` is the reference path used by the examples and tests; the
+`serve_step` it jits per step is the same function the decode dry-run
+shapes lower (one new token against the KV cache/state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0     # 0 → greedy
+    top_k: int = 0               # 0 → no top-k filtering
+    max_new_tokens: int = 32
+    eos_id: int = -1             # -1 → never stop early
+
+
+def sample_token(logits, key, cfg: SamplingConfig, vocab_size: int):
+    """logits: (B, V_padded) → (B,) int32; padded vocab ids are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = jnp.arange(logits.shape[-1]) < vocab_size
+    logits = jnp.where(mask, logits, -jnp.inf)
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+             sampling: SamplingConfig = SamplingConfig(),
+             key: Optional[jax.Array] = None,
+             max_seq: Optional[int] = None):
+    """Prefill on `batch` then decode `max_new_tokens` greedily/sampled.
+
+    Returns (tokens (B, max_new_tokens), per-step logits entropy trace).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    prompt_len = batch["tokens"].shape[1] + max(cfg.n_patches, 0)
+    if max_seq is None:
+        max_seq = prompt_len + sampling.max_new_tokens
+
+    prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg,
+                                        max_seq=max_seq))
+    step_fn = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+
+    logits, state = prefill(params, batch=batch)
+    outs = []
+    entropies = []
+    tok = None
+    for t in range(sampling.max_new_tokens):
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits[:, -1], sub, sampling, cfg.vocab_size)
+        outs.append(tok)
+        probs = jax.nn.softmax(logits[:, -1].astype(jnp.float32), -1)
+        entropies.append(float(-jnp.sum(
+            probs * jnp.log(probs + 1e-9), -1).mean()))
+        if sampling.eos_id >= 0 and bool((tok == sampling.eos_id).all()):
+            break
+        logits, state = step_fn(params, state=state, tokens=tok[:, None])
+    return jnp.stack(outs, axis=1), entropies

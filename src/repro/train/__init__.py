@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptimizerConfig, OptState, init_opt_state, apply_updates, lr_at, global_norm
+from repro.train.train_step import make_train_step

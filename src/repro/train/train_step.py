@@ -1,0 +1,71 @@
+"""Training step: grad accumulation over microbatches (`lax.scan`) +
+AdamW apply.
+
+The microbatch scan is also the collective-overlap mechanism (DESIGN §6):
+each microbatch's gradient psum (inserted by GSPMD for the data axis)
+overlaps with the next microbatch's compute inside the scan, and only the
+*accumulated* gradient flows into the optimizer — one reduce per step per
+tensor, amortized across microbatches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.train.optimizer import OptimizerConfig, OptState, apply_updates
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    """(B, ...) → (n, B/n, ...) for every batch leaf."""
+    def split(x):
+        b = x.shape[0]
+        if b % n:
+            raise ValueError(f"batch {b} not divisible by {n} microbatches")
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    micro_batches: int | None = None):
+    """Build the jit-able train_step(params, opt_state, batch)."""
+    n_micro = micro_batches or cfg.train_microbatches
+
+    def grad_one(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, mb, remat=cfg.remat)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch):
+        if n_micro == 1:
+            loss, metrics, grads = grad_one(params, batch)
+        else:
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+            mbs = _split_microbatches(batch, n_micro)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def body(acc, mb):
+                loss_a, grads_a = acc
+                loss, _, grads = grad_one(params, mb)
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + (g.astype(acc_dt) / n_micro),
+                    grads_a, grads)
+                return (loss_a + loss / n_micro, grads), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), mbs)
+            metrics = {}
+
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        out = {"loss": loss, **opt_metrics}
+        out.update({k: v for k, v in metrics.items() if k != "loss"})
+        return params, opt_state, out
+
+    return train_step

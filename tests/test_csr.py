@@ -1,0 +1,88 @@
+"""CSR / BlockCSR container tests incl. hypothesis round-trip properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csr import CSR, BlockCSR
+
+
+def random_sparse(rng, m, n, density):
+    d = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    return d.astype(np.float32)
+
+
+def test_csr_roundtrip_basic():
+    rng = np.random.default_rng(0)
+    d = random_sparse(rng, 13, 7, 0.3)
+    c = CSR.from_dense(d)
+    np.testing.assert_array_equal(np.asarray(c.to_dense()), d)
+
+
+def test_csr_padding_slots_harmless():
+    rng = np.random.default_rng(1)
+    d = random_sparse(rng, 8, 8, 0.2)
+    nnz = int((d != 0).sum())
+    c = CSR.from_dense(d, nnz_max=nnz + 17)
+    assert c.nnz_max == nnz + 17
+    np.testing.assert_array_equal(np.asarray(c.to_dense()), d)
+    assert int(c.nnz) == nnz
+
+
+def test_csr_row_ids():
+    d = np.array([[1, 0], [0, 2], [0, 0]], np.float32)
+    c = CSR.from_dense(d)
+    rows = np.asarray(c.row_ids())[: int(c.nnz)]
+    np.testing.assert_array_equal(rows, [0, 1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 24), n=st.integers(1, 24),
+    density=st.floats(0.0, 0.6), seed=st.integers(0, 2**16),
+)
+def test_csr_roundtrip_property(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    d = random_sparse(rng, m, n, density)
+    c = CSR.from_dense(d, nnz_max=max(int((d != 0).sum()), 1) + 3)
+    np.testing.assert_allclose(np.asarray(c.to_dense()), d, atol=0)
+    # row_ptr is monotone and consistent with nnz
+    rp = np.asarray(c.row_ptr)
+    assert (np.diff(rp) >= 0).all()
+    assert rp[-1] == (d != 0).sum()
+
+
+def test_blockcsr_roundtrip():
+    rng = np.random.default_rng(2)
+    d = np.zeros((64, 96), np.float32)
+    # fill a few blocks
+    d[0:16, 32:48] = rng.standard_normal((16, 16))
+    d[48:64, 0:16] = rng.standard_normal((16, 16))
+    b = BlockCSR.from_dense(d, (16, 16))
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), d)
+    assert b.density() == pytest.approx(2 / (4 * 6))
+
+
+def test_blockcsr_rejects_nondivisible():
+    with pytest.raises(ValueError):
+        BlockCSR.from_dense(np.zeros((10, 16), np.float32), (16, 16))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gm=st.integers(1, 4), gk=st.integers(1, 4),
+    density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
+)
+def test_blockcsr_roundtrip_property(gm, gk, density, seed):
+    rng = np.random.default_rng(seed)
+    bm = bk = 8
+    mask = rng.random((gm, gk)) < density
+    d = np.zeros((gm * bm, gk * bk), np.float32)
+    for i in range(gm):
+        for j in range(gk):
+            if mask[i, j]:
+                blk = rng.standard_normal((bm, bk)).astype(np.float32)
+                blk[0, 0] = blk[0, 0] or 1.0  # keep block non-zero
+                d[i*bm:(i+1)*bm, j*bk:(j+1)*bk] = blk
+    b = BlockCSR.from_dense(d, (bm, bk), n_blocks_max=int(mask.sum()) + 2)
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), d)

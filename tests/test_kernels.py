@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.csr import CSR, BlockCSR
+from repro.kernels import (csr_to_ell, maple_spmm, maple_spmspm,
+                           moe_expert_gemm)
+from repro.kernels import ref
+
+
+def _block_sparse(rng, m, k, bm, bk, density, dtype):
+    d = rng.standard_normal((m, k)).astype(dtype)
+    mask = rng.random((m // bm, k // bk)) < density
+    for i in range(m // bm):
+        for j in range(k // bk):
+            if not mask[i, j]:
+                d[i*bm:(i+1)*bm, j*bk:(j+1)*bk] = 0
+    return d, mask
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (128, 128, 128, 64, 64, 128),
+    (256, 384, 256, 64, 64, 128),
+    (128, 256, 512, 128, 128, 128),
+    (64, 64, 128, 8, 8, 64),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_maple_spmm_sweep(m, k, n, bm, bk, bn, dtype):
+    rng = np.random.default_rng(m + k + n)
+    d, mask = _block_sparse(rng, m, k, bm, bk, 0.4, np.float32)
+    a = BlockCSR.from_dense(d.astype(dtype), (bm, bk),
+                            n_blocks_max=int(mask.sum()) + 2)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out = maple_spmm(a, jnp.asarray(b).astype(dtype), bn=bn)
+    expect = d.astype(np.float32) @ b
+    tol = 1e-4 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), expect,
+        rtol=tol, atol=tol * np.abs(expect).max())
+
+
+def test_maple_spmm_empty_rows_zeroed():
+    rng = np.random.default_rng(0)
+    d, mask = _block_sparse(rng, 256, 256, 64, 64, 0.3, np.float32)
+    d[64:128] = 0.0  # block-row 1 fully empty
+    a = BlockCSR.from_dense(d, (64, 64))
+    b = rng.standard_normal((256, 128)).astype(np.float32)
+    out = np.asarray(maple_spmm(a, jnp.asarray(b)))
+    np.testing.assert_array_equal(out[64:128], 0.0)
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_maple_spmm_matches_ref_oracle():
+    rng = np.random.default_rng(3)
+    d, mask = _block_sparse(rng, 128, 192, 64, 64, 0.5, np.float32)
+    a = BlockCSR.from_dense(d, (64, 64))
+    b = jnp.asarray(rng.standard_normal((192, 128)).astype(np.float32))
+    out = maple_spmm(a, b)
+    oracle = ref.spmm_ref(a.blocks, a.block_row, a.block_col, b, m=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,da,db", [
+    (32, 32, 32, 0.1, 0.2),
+    (64, 48, 96, 0.3, 0.1),
+    (16, 64, 64, 0.5, 0.5),
+])
+def test_maple_spmspm_sweep(m, k, n, da, db):
+    rng = np.random.default_rng(m * n)
+    ad = ((rng.random((m, k)) < da) * rng.standard_normal((m, k))
+          ).astype(np.float32)
+    bd = ((rng.random((k, n)) < db) * rng.standard_normal((k, n))
+          ).astype(np.float32)
+    a, b = CSR.from_dense(ad), CSR.from_dense(bd)
+    out = maple_spmspm(a, b)
+    np.testing.assert_allclose(np.asarray(out), ad @ bd, rtol=1e-4, atol=1e-4)
+    oracle = ref.spmspm_ref(*csr_to_ell(a), b.to_dense())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_maple_spmspm_empty_row():
+    ad = np.zeros((8, 8), np.float32)
+    ad[0, 1] = 2.0  # row 0 only
+    bd = np.eye(8, dtype=np.float32)
+    out = np.asarray(maple_spmspm(CSR.from_dense(ad), CSR.from_dense(bd)))
+    np.testing.assert_allclose(out, ad @ bd)
+
+
+@pytest.mark.parametrize("sizes", [
+    [256, 0, 384, 128],
+    [128, 128, 128, 128],
+    [0, 0, 512, 0],
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_moe_gemm_sweep(sizes, dtype):
+    rng = np.random.default_rng(sum(sizes))
+    e, d, f, bt = len(sizes), 256, 256, 128
+    t = int(np.sum(sizes))
+    x = rng.standard_normal((t, d)).astype(np.float32)
+    w = rng.standard_normal((e, d, f)).astype(np.float32) * 0.1
+    y = moe_expert_gemm(jnp.asarray(x).astype(dtype),
+                        jnp.asarray(np.asarray(sizes, np.int32)),
+                        jnp.asarray(w).astype(dtype), bt=bt)
+    expect = np.zeros((t, f), np.float32)
+    off = 0
+    for ei, s in enumerate(sizes):
+        expect[off:off+s] = x[off:off+s] @ w[ei]
+        off += s
+    tol = 1e-4 if dtype == np.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), expect,
+                               rtol=tol, atol=tol * max(np.abs(expect).max(), 1))
