@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.csr import CSR, BlockCSR
 from repro.core.gustavson import spmm_rowwise
 from repro.kernels import (local_block_attention, maple_spmm,
-                           maple_spmspm, moe_expert_gemm)
+                           maple_spmspm, moe_expert_gemm, plan_spmm)
 
 
 def _time(fn, *args, reps=3):
@@ -29,9 +29,98 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _pattern_mask(kind: str, rng, gm: int, gk: int) -> np.ndarray:
+    """Block masks for the scheduler sweep (the paper's workload axes)."""
+    if kind == "uniform":
+        mask = rng.random((gm, gk)) < 0.3
+    elif kind == "power_law":
+        # Zipf-ish row lengths: a few dominant rows — the MatRaptor
+        # worst case the chunked plan exists to fix.
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            ln = max(1, int(round(gk * (i + 1) ** -1.2)))
+            mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            for j in range(gk):
+                if 0 <= i - j < 3:
+                    mask[i, j] = True
+    else:
+        raise ValueError(kind)
+    # no fully-empty matrix
+    if not mask.any():
+        mask[0, 0] = True
+    return mask
+
+
+def _masked_dense(rng, mask: np.ndarray, bm: int, bk: int) -> np.ndarray:
+    gm, gk = mask.shape
+    d = rng.standard_normal((gm * bm, gk * bk)).astype(np.float32)
+    return d * np.repeat(np.repeat(mask, bm, axis=0), bk, axis=1)
+
+
+def schedule_sweep(rng):
+    """Planned vs row-atomic vs naive schedules across sparsity patterns.
+
+    Predicted cycles come from the SAME ``core.maple`` model the analytics
+    use (`SpmmPlan.predicted_cycles`): `plan` is the realized lane
+    makespan, `maple`/`row_atomic` the analytical schedules.  Plans are
+    built once and closed over by a jitted call — what serving does — so
+    us_per_call measures compiled execution, which tracks total grid
+    steps: the load-balanced plan's makespan win over row-atomic shows up
+    directly.
+    """
+    gm = gk = 16
+    bm = bk = 16
+    n, n_lanes = 128, 8
+    for kind in ("uniform", "power_law", "banded"):
+        mask = _pattern_mask(kind, rng, gm, gk)
+        d = _masked_dense(rng, mask, bm, bk)
+        a = BlockCSR.from_dense(d, (bm, bk))
+        b = jnp.asarray(rng.standard_normal((gk * bk, n)).astype(np.float32))
+        for sched in ("naive", "row_atomic", "balanced"):
+            if sched == "naive":
+                fn = jax.jit(lambda aa, bb: maple_spmm(aa, bb,
+                                                       schedule="naive"))
+                derived = f"blocks={int(mask.sum())}"
+            else:
+                plan = plan_spmm(a, n_lanes=n_lanes,
+                                 row_atomic=(sched == "row_atomic"))
+                fn = jax.jit(
+                    lambda aa, bb, p=plan: maple_spmm(aa, bb, plan=p))
+                pc = plan.predicted_cycles()
+                derived = (f"pred_plan={pc['plan']:.0f}"
+                           f"/maple={pc['maple']:.0f}"
+                           f"/row_atomic={pc['row_atomic']:.0f}")
+            us = _time(fn, a, b, reps=20)
+            print(f"spmm_{kind}_{sched},{us:.0f},{derived}")
+
+    # batched RHS: one grid launch vs the host loop it replaces.  NB in
+    # interpret mode XLA fuses the jitted loop into one program, so the
+    # loop can even win here; the batched grid's advantage — a single
+    # dispatch whose G axis is megacore-parallel — is a TPU property.
+    # What this row pins on CPU is correctness and call-count, not speed.
+    mask = _pattern_mask("power_law", rng, gm, gk)
+    d = _masked_dense(rng, mask, bm, bk)
+    a = BlockCSR.from_dense(d, (bm, bk))
+    g = 4
+    b3 = jnp.asarray(rng.standard_normal((g, gk * bk, n)).astype(np.float32))
+    plan = plan_spmm(a, n_lanes=n_lanes)
+    fn = jax.jit(lambda aa, bb: maple_spmm(aa, bb, plan=plan))
+    us = _time(fn, a, b3, reps=20)
+    print(f"spmm_batched_g{g},{us:.0f},one_launch")
+    loop = jax.jit(lambda aa, bb: jnp.stack(
+        [maple_spmm(aa, bb[i], plan=plan) for i in range(g)]))
+    us = _time(loop, a, b3, reps=20)
+    print(f"spmm_hostloop_g{g},{us:.0f},per_rhs_launch")
+
+
 def run():
     rng = np.random.default_rng(0)
     print("name,us_per_call,derived")
+
+    schedule_sweep(rng)
 
     # BSR spmm across block densities (the Maple skip-rate table)
     m = k = n = 256
@@ -46,7 +135,8 @@ def run():
         a = BlockCSR.from_dense(d, (bm, bk),
                                 n_blocks_max=max(int(mask.sum()), 1))
         b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-        us = _time(lambda: maple_spmm(a, b))
+        # seed-era table: keep the seed kernel so rows stay comparable
+        us = _time(lambda: maple_spmm(a, b, schedule="naive"))
         blocks_moved = int(mask.sum())
         total_blocks = (m // bm) * (k // bk)
         print(f"maple_spmm_d{density},{us:.0f},"

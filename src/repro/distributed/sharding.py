@@ -78,20 +78,57 @@ class _Ctx(threading.local):
 _ctx = _Ctx()
 
 
+# The last mesh any trace ran under.  jax's tracing cache is keyed on the
+# function and argument avals — NOT on the mesh a sharding constraint
+# captured — so rebinding a different mesh (elastic restart, reshard-on-
+# load) would silently reuse jaxprs pinned to the old device set.  The
+# record is deliberately process-global (not per-_Ctx/thread) because the
+# caches it guards are process-global; the cost is a full clear whenever
+# the bound mesh changes, which only mesh-alternating workloads pay.
+_last_bound_mesh = [None]
+
+
 @contextlib.contextmanager
 def use_mesh_rules(mesh: Optional[Mesh],
                    rules: Optional[Mapping[str, Tuple[str, ...]]] = None):
     prev = (_ctx.mesh, _ctx.rules)
+    def _bind(m):
+        if m is not None and _last_bound_mesh[0] is not None \
+                and m != _last_bound_mesh[0]:
+            jax.clear_caches()
+        if m is not None:
+            _last_bound_mesh[0] = m
+
+    _bind(mesh)
     _ctx.mesh = mesh
     _ctx.rules = dict(rules) if rules is not None else DEFAULT_RULES
     try:
         yield
     finally:
         _ctx.mesh, _ctx.rules = prev
+        # traces after exit run under the restored mesh; keep the record
+        # honest so re-entering the inner mesh still invalidates
+        _bind(prev[0])
 
 
 def active_mesh() -> Optional[Mesh]:
     return _ctx.mesh
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable ``AbstractMesh`` constructor (no devices needed).
+
+    jax 0.4.x wants ``AbstractMesh((("data", 16), ("model", 16)))``; newer
+    jax wants ``AbstractMesh((16, 16), ("data", "model"))``.  Rule checks
+    (divisibility, spec selection) only need ``mesh.shape``, which both
+    expose as a name → size mapping.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
 
 
 def _mesh_axes_for(logical: AxisNames, mesh: Mesh) -> Optional[Tuple[str, ...]]:

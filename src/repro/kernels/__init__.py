@@ -8,6 +8,7 @@ from repro.kernels.ops import (
     maple_spmspm,
     moe_expert_gemm,
 )
+from repro.kernels.schedule import SpmmPlan, bsr_stats, plan_spmm
 
 __all__ = ["maple_spmm", "maple_spmspm", "moe_expert_gemm", "csr_to_ell",
-           "local_block_attention"]
+           "local_block_attention", "SpmmPlan", "bsr_stats", "plan_spmm"]

@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(
     kv_map,           # (nq*max_nb,) int32 scalar prefetch, -1 pads
@@ -133,7 +135,7 @@ def block_attention_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((s // bq, bq, h, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(flat_map,

@@ -1,0 +1,22 @@
+"""Version shims for the Pallas TPU surface.
+
+The container pins jax 0.4.37, where the TPU compiler-params dataclass is
+``pltpu.TPUCompilerParams``; newer jax renamed it ``pltpu.CompilerParams``.
+Every kernel in this package routes through :func:`tpu_compiler_params` so
+the kernels run unmodified on either side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(*, dimension_semantics, **kw):
+    """Build the TPU compiler-params object for the running jax version."""
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics), **kw
+    )

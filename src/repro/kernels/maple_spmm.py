@@ -23,6 +23,22 @@ Padding protocol (see ``core.csr.BlockCSR``): padded slots carry
 ``block_col = -1`` and a zero payload, and their ``block_row`` points at the
 last real block-row, so they are harmless accumulations into a tile that is
 flushed anyway.
+
+Three grid layouts live here (the wrappers in ops.py pick one):
+
+* :func:`maple_spmm_pallas` — the seed ``(N/bn, n_blocks)`` grid: one
+  unsplit block-row after the next (row-atomic; kept as the ``naive``
+  schedule and the jit-friendly path);
+* :func:`maple_spmm_batched_pallas` — the same walk lifted to a **3D grid**
+  ``(G, N/bn, n_blocks)`` over a batch of dense right-hand sides sharing
+  one A structure (the inference shape: G sequences × one sparse weight);
+* :func:`maple_spmm_planned_pallas` — the load-balanced grid
+  ``(G, n_lanes, N/bn, steps)`` driven by a ``kernels.schedule.SpmmPlan``:
+  each lane executes its chunk list (scalar-prefetched gather order), owns
+  a PSB per (row-run × N-tile), and flushes into its own slice of a
+  ``(G, n_lanes, M, N)`` buffer; the wrapper masks never-written tiles and
+  tree-sums over lanes — the cross-lane reduction that merges chunks of a
+  split row.
 """
 
 from __future__ import annotations
@@ -33,6 +49,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _kernel(
@@ -108,8 +126,188 @@ def maple_spmm_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((m, n), b_dense.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(block_row, safe_col, blocks, b_dense)
     return out
+
+
+# --------------------------------------------------------------------------
+# batched 3D grid: one A structure × G dense right-hand sides
+# --------------------------------------------------------------------------
+
+def _batched_kernel(
+    block_row,          # (n_blocks,) int32 scalar prefetch
+    block_col,          # (n_blocks,) int32, pads clamped by caller
+    a_blk_ref,          # (1, bm, bk)
+    b_panel_ref,        # (1, bk, bn) — panel of B[g]
+    out_ref,            # (1, bm, bn) — tile of C[g]
+    psb_ref,            # (bm, bn) f32
+    *,
+    n_blocks: int,
+):
+    s = pl.program_id(2)
+
+    is_first = jnp.logical_or(
+        s == 0, block_row[s] != block_row[jnp.maximum(s - 1, 0)])
+    is_last = jnp.logical_or(
+        s == n_blocks - 1,
+        block_row[s] != block_row[jnp.minimum(s + 1, n_blocks - 1)])
+
+    @pl.when(is_first)
+    def _zero():
+        psb_ref[...] = jnp.zeros_like(psb_ref)
+
+    psb_ref[...] += jnp.dot(
+        a_blk_ref[0], b_panel_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(is_last)
+    def _flush():
+        out_ref[0] = psb_ref[...].astype(out_ref.dtype)
+
+
+def maple_spmm_batched_pallas(
+    blocks: jax.Array,      # (n_blocks, bm, bk)
+    block_row: jax.Array,   # (n_blocks,) int32
+    block_col: jax.Array,   # (n_blocks,) int32
+    b_dense: jax.Array,     # (G, K, N)
+    *,
+    m: int,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Naive-schedule SpMM over a batch of RHS (raw; padding in ops.py)."""
+    n_blocks, bm, bk = blocks.shape
+    g, k, n = b_dense.shape
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    if m % bm or k % bk:
+        raise ValueError(f"({m},{k}) not divisible by block ({bm},{bk})")
+    grid = (g, n // bn, n_blocks)
+    safe_col = jnp.maximum(block_col, 0)
+
+    kernel = functools.partial(_batched_kernel, n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda gi, j, s, br, bc: (s, 0, 0)),
+                pl.BlockSpec((1, bk, bn),
+                             lambda gi, j, s, br, bc: (gi, bc[s], j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda gi, j, s, br, bc: (gi, br[s], j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), b_dense.dtype),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(block_row, safe_col, blocks, b_dense)
+
+
+# --------------------------------------------------------------------------
+# planned lane-parallel grid: SpmmPlan-driven chunk execution
+# --------------------------------------------------------------------------
+
+def _planned_kernel(
+    order,              # (L*S,) int32 scalar prefetch: gather into blocks
+    step_row,           # (L*S,) int32: output block-row per step
+    step_col,           # (L*S,) int32: B block-col per step, -1 on pads
+    a_blk_ref,          # (1, bm, bk) block selected by order
+    b_panel_ref,        # (1, bk, bn) panel selected by step_col
+    out_ref,            # (1, 1, bm, bn) — (g, lane, row, j) tile
+    psb_ref,            # (bm, bn) f32 — this lane's PSB
+    *,
+    steps: int,
+):
+    l = pl.program_id(1)
+    s = pl.program_id(3)
+    base = l * steps
+    row = step_row[base + s]
+
+    # run boundaries *within this lane*: the plan sorts each lane's chunks
+    # by row, so a (lane, row) run is contiguous — zero once, flush once.
+    is_first = jnp.logical_or(
+        s == 0, row != step_row[base + jnp.maximum(s - 1, 0)])
+    is_last = jnp.logical_or(
+        s == steps - 1, row != step_row[base + jnp.minimum(s + 1, steps - 1)])
+
+    @pl.when(is_first)
+    def _zero():
+        psb_ref[...] = jnp.zeros_like(psb_ref)
+
+    # pad steps (col == -1) re-fetch block 0 / panel 0 but contribute 0
+    live = step_col[base + s] >= 0
+    a = jnp.where(live, a_blk_ref[0], jnp.zeros_like(a_blk_ref[0]))
+    psb_ref[...] += jnp.dot(
+        a, b_panel_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(is_last)
+    def _flush():
+        out_ref[0, 0] = psb_ref[...].astype(out_ref.dtype)
+
+
+def maple_spmm_planned_pallas(
+    blocks: jax.Array,      # (n_blocks, bm, bk)
+    order: jax.Array,       # (L, S) int32
+    step_row: jax.Array,    # (L, S) int32
+    step_col: jax.Array,    # (L, S) int32, -1 pads
+    b_dense: jax.Array,     # (G, K, N)
+    *,
+    m: int,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Plan-driven SpMM.  Returns per-lane partials ``(G, L, M, N)`` in
+    **f32** — partials of a split row must survive until the cross-lane
+    reduction at full accumulator precision, or the planned schedule would
+    round twice where the naive one rounds once.  The ops.py wrapper masks
+    unwritten (lane, row) tiles, reduces over lanes, and casts
+    (raw kernel — no padding/masking logic here)."""
+    n_blocks, bm, bk = blocks.shape
+    g, k, n = b_dense.shape
+    lanes, steps = order.shape
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    if m % bm or k % bk:
+        raise ValueError(f"({m},{k}) not divisible by block ({bm},{bk})")
+    grid = (g, lanes, n // bn, steps)
+
+    flat_order = order.reshape(-1).astype(jnp.int32)
+    flat_row = step_row.reshape(-1).astype(jnp.int32)
+    flat_col = step_col.reshape(-1).astype(jnp.int32)
+
+    kernel = functools.partial(_planned_kernel, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, bm, bk),
+                    lambda gi, l, j, s, o, r, c: (o[l * steps + s], 0, 0)),
+                pl.BlockSpec(
+                    (1, bk, bn),
+                    lambda gi, l, j, s, o, r, c: (
+                        gi, jnp.maximum(c[l * steps + s], 0), j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bm, bn),
+                lambda gi, l, j, s, o, r, c: (gi, l, r[l * steps + s], j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((g, lanes, m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+    )(flat_order, flat_row, flat_col, blocks, b_dense)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(
     col_ids,          # (M*L,) int32 scalar prefetch, -1 pads clamped by caller
@@ -82,7 +84,7 @@ def maple_spmspm_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((m, n), values.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(flat_cols, values, b_rows)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(
     expert_of_tile,   # (T/bt,) int32 scalar prefetch
@@ -86,7 +88,7 @@ def moe_gemm_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(expert_of_tile, x, w)

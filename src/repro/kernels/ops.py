@@ -22,38 +22,137 @@ import numpy as np
 from repro.core.csr import CSR, BlockCSR
 from repro.kernels.block_attn import (block_attention_pallas,
                                       local_window_kv_map)
-from repro.kernels.maple_spmm import maple_spmm_pallas
+from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
+                                      maple_spmm_pallas,
+                                      maple_spmm_planned_pallas)
 from repro.kernels.maple_spmspm import maple_spmspm_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
+from repro.kernels.schedule import SpmmPlan, plan_spmm
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ceiling for the planned kernel's (G, n_lanes, M, N) f32 per-lane partial
+# buffer; auto-planning trims n_lanes to stay under it (wide outputs would
+# otherwise multiply their peak memory by the lane count)
+LANE_BUDGET_BYTES = 256 * 1024 * 1024
+
+
 # --------------------------------------------------------------------------
 # BSR × dense
 # --------------------------------------------------------------------------
 
+def _pad_cols(b: jax.Array, bn: int) -> tuple[jax.Array, int]:
+    """Zero-pad the last axis up to a multiple of ``bn``."""
+    n = b.shape[-1]
+    pad = (-n) % bn
+    if pad:
+        width = [(0, 0)] * (b.ndim - 1) + [(0, pad)]
+        b = jnp.pad(b, width)
+    return b, n
+
+
 def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
+               schedule: str = "balanced", n_lanes: int = 8,
+               chunk: int | None = None, plan: SpmmPlan | None = None,
                interpret: bool | None = None) -> jax.Array:
     """C = A_bsr @ B with the Maple block dataflow.
 
-    Empty block-rows never flush their PSB, so their output tiles are
-    explicitly zero-masked from the (host-static) row_ptr metadata.
+    ``b_dense`` is one ``(K, N)`` right-hand side or a batch ``(G, K, N)``
+    of them sharing A's structure (the inference shape — one kernel launch,
+    no host loop over the batch).  ``N`` may be ragged; it is zero-padded to
+    the ``bn`` tile internally and sliced back.
+
+    ``schedule`` selects the execution plan:
+
+    * ``"balanced"`` (default) — heavy block-rows split into ≤ ``chunk``
+      sized row-chunks LPT-packed onto ``n_lanes`` lanes (see
+      ``kernels.schedule``); removes the heaviest-row bound that
+      ``core.maple.maple_pe_cycles`` predicts for row-atomic walks.
+    * ``"row_atomic"`` — whole rows pinned to lanes (MatRaptor baseline;
+      same kernel, different plan).
+    * ``"naive"`` — the seed single-stream walk in BlockCSR construction
+      order.  Metadata stays traced, so this path always composes with
+      jit; the planned schedules read the (host-static) pattern at call
+      time, so under jit they require a prebuilt ``plan``.
+
+    Pass a prebuilt ``plan`` (from ``kernels.schedule.plan_spmm``) to
+    amortize planning across calls and to jit the planned path — serving
+    builds it once per weight and closes a jitted call over it.
+
+    Empty block-rows never flush a PSB; their output tiles are explicitly
+    zero-masked (naive path: from row_ptr; planned paths: from the plan's
+    ``written`` map, which also discards never-flushed lane tiles).
     """
     if interpret is None:
         interpret = _default_interpret()
+    if schedule not in ("balanced", "row_atomic", "naive"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if schedule == "naive" and plan is not None:
+        raise ValueError("schedule='naive' does not execute a plan; "
+                         "drop `plan` or pick a planned schedule")
+    if b_dense.ndim not in (2, 3):
+        raise ValueError(f"B must be (K, N) or (G, K, N), got {b_dense.shape}")
+    if b_dense.shape[-2] != a.shape[1]:
+        raise ValueError(
+            f"contraction mismatch: A is {a.shape}, B has K={b_dense.shape[-2]}")
     m = a.shape[0]
     bm = a.block_shape[0]
-    out = maple_spmm_pallas(
-        a.blocks, a.block_row, a.block_col, b_dense,
-        m=m, bn=bn, interpret=interpret,
-    )
-    # mask tiles of block-rows that own no non-zero block
-    row_len = a.row_ptr[1:] - a.row_ptr[:-1]            # (gm,)
-    mask = jnp.repeat(row_len > 0, bm)                  # (M,)
-    return jnp.where(mask[:, None], out, 0)
+    batched = b_dense.ndim == 3
+    b3 = b_dense if batched else b_dense[None]
+    b3, n_orig = _pad_cols(b3, bn)
+
+    # planning walks host metadata; under jit (traced row_ptr) a planned
+    # schedule needs a prebuilt plan — otherwise fall back to the naive
+    # walk instead of crashing on the tracer.
+    if plan is None and isinstance(a.row_ptr, jax.core.Tracer):
+        schedule = "naive"
+    if plan is not None:
+        if plan.n_block_rows != a.n_block_rows:
+            raise ValueError(
+                f"plan is for {plan.n_block_rows} block-rows, "
+                f"operand has {a.n_block_rows}")
+        if plan.order.size and int(plan.order.max()) >= a.n_blocks_max:
+            raise ValueError("plan indexes blocks beyond the operand's "
+                             "capacity — was it built for this weight?")
+
+    if schedule == "naive":
+        if batched:
+            out = maple_spmm_batched_pallas(
+                a.blocks, a.block_row, a.block_col, b3,
+                m=m, bn=bn, interpret=interpret)
+        else:
+            out = maple_spmm_pallas(
+                a.blocks, a.block_row, a.block_col, b3[0],
+                m=m, bn=bn, interpret=interpret)[None]
+        # mask tiles of block-rows that own no non-zero block
+        row_len = a.row_ptr[1:] - a.row_ptr[:-1]            # (gm,)
+        mask = jnp.repeat(row_len > 0, bm)                  # (M,)
+        out = jnp.where(mask[None, :, None], out, 0)
+    else:
+        if plan is None:
+            # callers that pass an explicit plan keep full control; auto
+            # planning respects the lane-buffer budget
+            tile_bytes = 4 * m * b3.shape[-1] * b3.shape[0]   # f32 partials
+            n_lanes = max(1, min(n_lanes,
+                                 LANE_BUDGET_BYTES // max(tile_bytes, 1)))
+            plan = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
+                             row_atomic=(schedule == "row_atomic"))
+        lanes = maple_spmm_planned_pallas(
+            a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), b3, m=m, bn=bn, interpret=interpret)
+        # discard tiles no (lane, row) run ever flushed, then merge the
+        # per-lane f32 partials — the cross-lane reduction of split rows —
+        # and only then round to the output dtype (one rounding, like the
+        # naive single-accumulator walk).
+        mask = jnp.repeat(jnp.asarray(plan.written), bm, axis=1)  # (L, M)
+        lanes = jnp.where(mask[None, :, :, None], lanes, 0)
+        out = lanes.sum(axis=1).astype(b3.dtype)
+
+    out = out[..., :n_orig]
+    return out if batched else out[0]
 
 
 # --------------------------------------------------------------------------

@@ -19,7 +19,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.csr import BlockCSR
 from repro.distributed.sharding import shard
 
 
@@ -514,3 +516,60 @@ def mlp(p, x, activation: str):
     h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"])
     h = shard(h, ("batch", "seq", "mlp"))
     return jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"]
+
+
+# --------------------------------------------------------------------------
+# block-sparse projections (the Maple kernel as a model layer)
+# --------------------------------------------------------------------------
+
+def init_sparse_linear(key, d_in: int, d_out: int, *,
+                       block_shape=(64, 64), block_density: float = 0.25,
+                       dtype=jnp.float32) -> BlockCSR:
+    """Block-sparse ``(d_out, d_in)`` projection weight as BlockCSR.
+
+    Sparsity is sampled at block granularity — the unit the Maple kernels
+    skip — and every block-row keeps at least one block so no output
+    channel goes structurally dead.  BlockCSR is a pytree, so the weight
+    drops into a params dict like any dense array.
+    """
+    bm, bk = block_shape
+    if d_out % bm or d_in % bk:
+        raise ValueError(f"({d_out},{d_in}) not divisible by {block_shape}")
+    gm, gk = d_out // bm, d_in // bk
+    k_mask, k_val = jax.random.split(key)
+    mask = jax.random.uniform(k_mask, (gm, gk)) < block_density
+    fallback = jnp.zeros((gm, gk), bool).at[
+        jnp.arange(gm), jnp.arange(gm) % gk].set(True)
+    mask = jnp.where(mask.any(axis=1, keepdims=True), mask, fallback)
+    fan_in = max(d_in * block_density, float(bk))   # expected live fan-in
+    w = jax.random.normal(k_val, (d_out, d_in)) / math.sqrt(fan_in)
+    dense = w * jnp.repeat(jnp.repeat(mask, bm, axis=0), bk, axis=1)
+    return BlockCSR.from_dense(np.asarray(dense.astype(dtype)), block_shape)
+
+
+def sparse_linear(w: BlockCSR, x, *, plan=None, bn: int = 128,
+                  schedule: str = "balanced", interpret=None):
+    """``y = x @ Wᵀ`` for block-sparse ``W`` in ONE batched kernel launch.
+
+    ``x`` may be ``(d_in,)``, ``(T, d_in)`` or ``(B, S, d_in)``.  Tokens
+    are moved token-minor so they become the PSB columns of the kernel: a
+    3D ``x`` maps each batch element to one dense right-hand side of the
+    batched grid — the host never loops over ``B`` (the seed kernels
+    forced exactly that loop).  Ragged token counts are fine; the wrapper
+    pads to the ``bn`` tile and slices back.
+
+    Pass ``plan`` (from ``repro.kernels.plan_spmm``) to amortize schedule
+    construction across calls — layers build it once per weight.
+    """
+    from repro.kernels import maple_spmm  # local: keep layers importable
+    # without pulling pallas in for dense-only models
+    d_out = w.shape[0]
+    if x.ndim == 3:
+        bt = jnp.swapaxes(x, 1, 2)                      # (B, d_in, S)
+        y = maple_spmm(w, bt, bn=bn, plan=plan, schedule=schedule,
+                       interpret=interpret)             # (B, d_out, S)
+        return jnp.swapaxes(y, 1, 2)
+    flat = x.reshape(-1, x.shape[-1])                   # (T, d_in)
+    y = maple_spmm(w, flat.T, bn=bn, plan=plan, schedule=schedule,
+                   interpret=interpret)                 # (d_out, T)
+    return y.T.reshape(*x.shape[:-1], d_out)

@@ -16,7 +16,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.csr import BlockCSR
+from repro.kernels.schedule import SpmmPlan, plan_spmm
 from repro.models import lm
+from repro.models.layers import sparse_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLogitHead:
+    """Serving-side block-sparse unembedding.
+
+    Scoring a batch of hidden states ``(B, S, D)`` against a block-sparse
+    ``(V, D)`` head used to mean a host-side loop of one kernel call per
+    sequence — the seed ``maple_spmm`` took a single unbatched RHS.  With
+    the batched planned grid the whole batch is one ``pallas_call``, and
+    the load-balanced execution plan is built **once** here from the
+    weight's (static) sparsity pattern and reused on every step.
+    """
+
+    weight: BlockCSR         # (vocab, d_model) block-sparse
+    plan: SpmmPlan
+
+    @classmethod
+    def build(cls, weight: BlockCSR, *, n_lanes: int = 8,
+              chunk: int | None = None) -> "SparseLogitHead":
+        return cls(weight=weight,
+                   plan=plan_spmm(weight, n_lanes=n_lanes, chunk=chunk))
+
+    @property
+    def predicted_cycles(self):
+        """Planner/analytical cycle estimates (see SpmmPlan)."""
+        return self.plan.predicted_cycles()
+
+    def __call__(self, hidden: jax.Array) -> jax.Array:
+        """hidden: (B, S, D) → logits (B, S, V) in one batched launch."""
+        from repro.kernels.ops import LANE_BUDGET_BYTES
+        # a prebuilt plan pins n_lanes; when vocab × tokens is wide enough
+        # that the per-lane partial buffer would blow the budget, defer to
+        # the wrapper's auto-planning, which trims the lane count instead
+        tokens = int(np.prod(hidden.shape[:-1])) if hidden.ndim > 1 else 1
+        buf = 4 * self.plan.n_lanes * self.weight.shape[0] * tokens
+        if buf > LANE_BUDGET_BYTES:
+            return sparse_linear(self.weight, hidden)
+        return sparse_linear(self.weight, hidden, plan=self.plan)
 
 
 @dataclasses.dataclass(frozen=True)

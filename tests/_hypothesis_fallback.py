@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for the optional ``hypothesis`` dev dep.
+
+``hypothesis`` is an *optional* dev dependency of this suite: when it is
+installed the property tests use it unchanged, when it is missing the test
+modules fall back to this shim so the suite still collects and the
+properties still run against varied (seeded, reproducible) inputs.
+
+Only the slice of the API this suite uses is implemented:
+
+* ``strategies.integers(lo, hi)`` / ``strategies.floats(lo, hi)`` /
+  ``strategies.sampled_from(seq)``
+* ``@given(**strategies)`` — replays the test body over ``max_examples``
+  deterministic draws; the first two draws pin every strategy to its
+  lower / upper bound so edge cases are always exercised.
+* ``@settings(max_examples=..., deadline=...)`` — ``max_examples`` is
+  honored, everything else is ignored.
+
+No shrinking, no database, no stateful testing — install ``hypothesis``
+(``pip install hypothesis``) for the real thing.
+"""
+
+from __future__ import annotations
+
+import random
+
+_DEFAULT_MAX_EXAMPLES = 20
+_ATTR = "_fallback_max_examples"
+
+
+class _Strategy:
+    def __init__(self, draw, edges):
+        self._draw = draw
+        self.edges = list(edges)  # deterministic boundary examples
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         (min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         (min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq), (seq[0], seq[-1]))
+
+
+def settings(max_examples: int | None = None, **_ignored):
+    def deco(fn):
+        setattr(fn, _ATTR, max_examples)
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, _ATTR, None) or _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(0xC5A)
+            for i in range(n):
+                if i < 2:  # boundary draws first
+                    drawn = {k: s.edges[i % len(s.edges)]
+                             for k, s in strats.items()}
+                else:
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(**drawn)
+        # copy identity + any @settings attribute, but NOT the signature:
+        # pytest must see a zero-argument test, not hypothesis params that
+        # look like fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(getattr(fn, "__dict__", {}))
+        return wrapper
+    return deco
+
+
+st = strategies

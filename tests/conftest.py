@@ -1,0 +1,39 @@
+"""Suite-wide fixtures/hooks: per-test wall-clock timeouts.
+
+The container has no pytest-timeout plugin, so the timeout is a SIGALRM
+alarm around each test call: a hung kernel interpret run or subprocess
+fails loudly (with a stack) instead of wedging the whole suite.  Override
+per test with ``@pytest.mark.timeout(seconds)``; 0 disables.
+"""
+
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+DEFAULT_TIMEOUT_S = 300
+
+
+class TestTimeout(Exception):
+    pass
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    seconds = int(marker.args[0]) if (marker and marker.args) \
+        else DEFAULT_TIMEOUT_S
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        return (yield)
+
+    def _alarm(signum, frame):
+        raise TestTimeout(f"{item.nodeid} exceeded {seconds}s")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(seconds)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/README.md
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.csr import CSR
 from repro.core.gustavson import (dense_oracle, spmm_rowwise,

@@ -2,7 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/README.md
+    from _hypothesis_fallback import given, settings, strategies as st
+
+pytestmark = pytest.mark.tier1
+
 
 from repro.core import (analyze_spgemm, compare, simulate, sparsity,
                         matraptor_baseline, matraptor_maple,

@@ -6,7 +6,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep; see tests/README.md
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models import moe as M
 

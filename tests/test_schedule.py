@@ -1,0 +1,342 @@
+"""Scheduler tests: golden event counts on hand-counted CSRs, plan
+invariants, and the property that ANY plan (chunk splits, lane
+permutations, row-atomic or balanced) reproduces the dense reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import jax
+from repro.core.csr import CSR, BlockCSR
+from repro.core.maple import (analyze_spgemm, baseline_pe_cycles,
+                              maple_pe_cycles)
+from repro.kernels import maple_spmm, plan_spmm, bsr_stats
+from repro.kernels.schedule import SpmmPlan
+
+pytestmark = pytest.mark.tier1
+
+
+# --------------------------------------------------------------------------
+# golden values: analyze_spgemm / maple_pe_cycles on hand-counted matrices
+# --------------------------------------------------------------------------
+
+def test_analyze_spgemm_golden():
+    # A = [[1,0,2],[0,0,0],[0,3,0]],  B = [[1,1,0],[0,2,0],[3,0,4]]
+    a = CSR.from_dense(np.array([[1, 0, 2], [0, 0, 0], [0, 3, 0]], np.float32))
+    b = CSR.from_dense(np.array([[1, 1, 0], [0, 2, 0], [3, 0, 4]], np.float32))
+    st = analyze_spgemm(a, b)
+    # hand count: A[0,0] hits B row0 (2 nnz), A[0,2] hits B row2 (2 nnz),
+    # A[2,1] hits B row1 (1 nnz)
+    assert st.nnz_a == 3 and st.nnz_b == 5
+    assert st.partial_products == 5
+    assert st.row_partials.tolist() == [4, 0, 1]
+    # C row0 = [7,1,8] (3 nnz), C row2 = [0,6,0] (1 nnz)
+    assert st.nnz_c == 4
+    assert st.b_row_refs.tolist() == [1, 1, 1]
+    assert st.row_fibers.tolist() == [2, 0, 1]
+
+
+def test_maple_pe_cycles_golden():
+    a = CSR.from_dense(np.array([[1, 0, 2], [0, 0, 0], [0, 3, 0]], np.float32))
+    b = CSR.from_dense(np.array([[1, 1, 0], [0, 2, 0], [3, 0, 4]], np.float32))
+    st = analyze_spgemm(a, b)
+    # row_partials = [4, 0, 1]; with m=2 MACs: ceil -> [2, 0, 1]
+    assert maple_pe_cycles(st, macs_per_pe=2, n_pes=1) == 3.0
+    assert maple_pe_cycles(st, macs_per_pe=2, n_pes=2) == 2.0
+    # row-atomic single-MAC: heaviest row (4) bounds 2 PEs
+    assert baseline_pe_cycles(st, n_pes=2, row_atomic=True) == 4.0
+    assert baseline_pe_cycles(st, n_pes=2, row_atomic=False) == 2.5
+
+
+def test_bsr_stats_golden():
+    # 4x4 dense, 2x2 blocks, block pattern [[1,1],[0,1]]
+    d = np.zeros((4, 4), np.float32)
+    d[0:2, 0:2] = 1.0
+    d[0:2, 2:4] = 2.0
+    d[2:4, 2:4] = 3.0
+    a = BlockCSR.from_dense(d, (2, 2))
+    st = bsr_stats(a)
+    assert st.partial_products == 3             # one MAC per nz block
+    assert st.row_partials.tolist() == [2, 1]
+    assert st.nnz_c == 3
+    # the analytical twins at block grain
+    assert maple_pe_cycles(st, macs_per_pe=2, n_pes=1) == 2.0
+    assert baseline_pe_cycles(st, n_pes=2, row_atomic=True) == 2.0
+
+
+# --------------------------------------------------------------------------
+# plan construction invariants
+# --------------------------------------------------------------------------
+
+def _pattern(rng, gm, gk, kind):
+    if kind == "uniform":
+        mask = rng.random((gm, gk)) < 0.4
+    elif kind == "power_law":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            ln = max(1, int(round(gk * (i + 1) ** -1.3)))
+            mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.abs(np.subtract.outer(np.arange(gm),
+                                        np.arange(gk))) <= 1
+    elif kind == "empty_rows":
+        mask = rng.random((gm, gk)) < 0.5
+        mask[:: 2] = False                       # every other row empty
+    elif kind == "all_zero":
+        mask = np.zeros((gm, gk), bool)
+    else:
+        raise ValueError(kind)
+    return mask
+
+
+def _bsr(rng, mask, bm, bk, extra_pad=0):
+    gm, gk = mask.shape
+    d = rng.standard_normal((gm * bm, gk * bk)).astype(np.float32)
+    d *= np.repeat(np.repeat(mask, bm, 0), bk, 1)
+    nnzb = int(mask.sum())
+    return d, BlockCSR.from_dense(d, (bm, bk),
+                                  n_blocks_max=max(nnzb, 1) + extra_pad)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded",
+                                  "empty_rows", "all_zero"])
+@pytest.mark.parametrize("row_atomic", [False, True])
+def test_plan_invariants(kind, row_atomic):
+    rng = np.random.default_rng(7)
+    mask = _pattern(rng, 8, 8, kind)
+    _, a = _bsr(rng, mask, 8, 8, extra_pad=2)
+    nnzb = int(mask.sum())
+    plan = plan_spmm(a, n_lanes=3, chunk=None if row_atomic else 2,
+                     row_atomic=row_atomic)
+
+    live = plan.step_col >= 0
+    # every real block scheduled exactly once; pad slots never scheduled
+    assert sorted(plan.order[live].tolist()) == list(range(nnzb))
+    assert plan.n_real_steps == nnzb
+    # lane-local rows are sorted -> each (lane, row) PSB run is contiguous
+    for l in range(plan.n_lanes):
+        rows = plan.step_row[l][live[l]]
+        assert (np.diff(rows) >= 0).all()
+        # written map matches exactly the rows this lane flushes
+        assert set(rows.tolist()) == set(np.nonzero(plan.written[l])[0])
+    # makespan == max lane load (no lane exceeds `steps`)
+    assert live.sum(axis=1).max(initial=0) <= plan.steps
+    assert 0.0 <= plan.utilization <= 1.0
+    pc = plan.predicted_cycles()
+    assert set(pc) == {"plan", "maple", "row_atomic"}
+
+
+def test_chunk_bound_respected():
+    rng = np.random.default_rng(1)
+    mask = np.ones((4, 8), bool)                 # heavy uniform rows
+    _, a = _bsr(rng, mask, 8, 8)
+    plan = plan_spmm(a, n_lanes=4, chunk=3)
+    # a (lane, row) run may merge several chunks of the same row, but no
+    # single-row run assigned by one LPT item exceeds... merged runs can;
+    # instead check the split actually happened: with 8-block rows and
+    # chunk=3 at least ceil(8/3)=3 chunks per row exist, so some row spans
+    # two lanes.
+    rows_per_lane = [set(plan.step_row[l][plan.step_col[l] >= 0].tolist())
+                     for l in range(plan.n_lanes)]
+    shared = set.intersection(*(s for s in rows_per_lane if s)) \
+        if any(rows_per_lane) else set()
+    spans = sum(len(s) for s in rows_per_lane)
+    assert spans > len(set.union(*rows_per_lane)), \
+        "chunking should spread at least one row over multiple lanes"
+    assert shared is not None  # structure sanity
+
+
+def test_power_law_balanced_beats_row_atomic():
+    """The paper's claim at kernel granularity: splitting rows removes the
+    heaviest-row bound of the row-atomic schedule."""
+    rng = np.random.default_rng(3)
+    # strongly skewed: one dominant row (16 blocks) over light rows — the
+    # regime the paper's Fig. 8 speedups come from
+    mask = np.zeros((8, 16), bool)
+    mask[0] = True
+    mask[1:, 0] = True
+    _, a = _bsr(rng, mask, 8, 8)
+    bal = plan_spmm(a, n_lanes=4, chunk=2)
+    atom = plan_spmm(a, n_lanes=4, row_atomic=True)
+    assert bal.steps < atom.steps
+    st = bsr_stats(a)
+    # shared analytical model agrees at equal MAC budget: one 4-MAC Maple
+    # PE (rows drained at 4 blocks/cycle) vs four single-MAC row-atomic
+    # PEs (heaviest row pins one PE)
+    assert maple_pe_cycles(st, macs_per_pe=4, n_pes=1) \
+        < baseline_pe_cycles(st, n_pes=4, row_atomic=True)
+
+
+# --------------------------------------------------------------------------
+# any plan reproduces the dense reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded",
+                                  "empty_rows", "all_zero"])
+def test_planned_spmm_matches_dense(kind):
+    rng = np.random.default_rng(11)
+    mask = _pattern(rng, 4, 6, kind)
+    d, a = _bsr(rng, mask, 8, 8, extra_pad=3)    # includes pad slots
+    b = rng.standard_normal((48, 24)).astype(np.float32)  # ragged N
+    expect = d @ b
+    for sched, lanes, chunk in [("balanced", 1, 1), ("balanced", 3, 2),
+                                ("balanced", 8, None),
+                                ("row_atomic", 3, None),
+                                ("naive", 0, None)]:
+        out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16,
+                                    schedule=sched,
+                                    n_lanes=max(lanes, 1), chunk=chunk))
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{kind}/{sched}/L{lanes}")
+
+
+def test_lane_permuted_plan_matches_dense():
+    """Permuting plan lanes is still a valid plan — execution order across
+    lanes is free; only lane-local run contiguity matters."""
+    rng = np.random.default_rng(5)
+    mask = _pattern(rng, 6, 6, "power_law")
+    d, a = _bsr(rng, mask, 8, 8)
+    plan = plan_spmm(a, n_lanes=4, chunk=2)
+    perm = rng.permutation(plan.n_lanes)
+    shuffled = SpmmPlan(order=plan.order[perm], step_row=plan.step_row[perm],
+                        step_col=plan.step_col[perm],
+                        written=plan.written[perm], chunk=plan.chunk,
+                        n_block_rows=plan.n_block_rows,
+                        n_real_steps=plan.n_real_steps, stats=plan.stats)
+    b = rng.standard_normal((48, 16)).astype(np.float32)
+    out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16, plan=shuffled))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded"])
+def test_batched_spmm_matches_dense(kind):
+    """Acceptance: batched maple_spmm == dense reference on >= 3 patterns."""
+    rng = np.random.default_rng(13)
+    mask = _pattern(rng, 4, 4, kind)
+    d, a = _bsr(rng, mask, 8, 8)
+    b3 = rng.standard_normal((3, 32, 16)).astype(np.float32)
+    expect = np.einsum("mk,gkn->gmn", d, b3)
+    for sched in ("naive", "balanced"):
+        out = np.asarray(maple_spmm(a, jnp.asarray(b3), bn=16,
+                                    schedule=sched, n_lanes=3))
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{kind}/{sched}")
+
+
+def test_jit_composition():
+    """Bare jit falls back to the naive walk (planning can't read traced
+    metadata); a prebuilt plan closed over by the jitted fn runs planned."""
+    rng = np.random.default_rng(17)
+    mask = _pattern(rng, 4, 4, "power_law")
+    d, a = _bsr(rng, mask, 8, 8)
+    b = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    out = np.asarray(jax.jit(lambda aa, bb: maple_spmm(aa, bb, bn=16))(a, b))
+    np.testing.assert_allclose(out, d @ np.asarray(b), rtol=1e-4, atol=1e-4)
+    plan = plan_spmm(a, n_lanes=3)
+    out = np.asarray(
+        jax.jit(lambda aa, bb: maple_spmm(aa, bb, bn=16, plan=plan))(a, b))
+    np.testing.assert_allclose(out, d @ np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_plan_operand_mismatch_raises():
+    rng = np.random.default_rng(19)
+    _, a8 = _bsr(rng, _pattern(rng, 8, 8, "uniform"), 8, 8)
+    _, a4 = _bsr(rng, _pattern(rng, 4, 4, "uniform"), 8, 8)
+    plan8 = plan_spmm(a8, n_lanes=2)
+    with pytest.raises(ValueError, match="block-rows"):
+        maple_spmm(a4, jnp.zeros((32, 16), jnp.float32), bn=16, plan=plan8)
+    # same block-row count, fewer blocks: order indexes past capacity
+    mask_dense = np.ones((4, 4), bool)
+    mask_thin = np.zeros((4, 4), bool)
+    mask_thin[np.arange(4), np.arange(4)] = True
+    _, a_dense = _bsr(rng, mask_dense, 8, 8)
+    _, a_thin = _bsr(rng, mask_thin, 8, 8)
+    plan_dense = plan_spmm(a_dense, n_lanes=2)
+    with pytest.raises(ValueError, match="capacity"):
+        maple_spmm(a_thin, jnp.zeros((32, 16), jnp.float32), bn=16,
+                   plan=plan_dense)
+
+
+def test_bf16_split_row_rounds_once():
+    """Lane partials stay f32 until the cross-lane sum: a split heavy row
+    rounds to bf16 once, like the naive single-accumulator walk — not once
+    per chunk."""
+    from repro.kernels.maple_spmm import maple_spmm_planned_pallas
+    rng = np.random.default_rng(23)
+    mask = np.zeros((2, 8), bool)
+    mask[0] = True                                # one heavy row
+    mask[1, 0] = True
+    d, _ = _bsr(rng, mask, 8, 8)
+    a = BlockCSR.from_dense(d.astype(jnp.bfloat16), (8, 8))
+    b = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    plan = plan_spmm(a, n_lanes=4, chunk=2)
+    # mechanism: the raw kernel emits f32 per-lane partials for bf16 in
+    lanes = maple_spmm_planned_pallas(
+        a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+        jnp.asarray(plan.step_col), b[None], m=16, bn=16)
+    assert lanes.dtype == jnp.float32
+    # consequence: the split schedule matches the f32 product of the
+    # bf16-quantized inputs to single-rounding accuracy
+    ref = np.asarray(a.to_dense(), np.float32) @ np.asarray(b, np.float32)
+    split = np.asarray(maple_spmm(a, b, bn=16, plan=plan), np.float32)
+    np.testing.assert_allclose(split, ref, rtol=1e-2,
+                               atol=1e-2 * np.abs(ref).max())
+
+
+def test_shape_validation():
+    rng = np.random.default_rng(0)
+    a = BlockCSR.from_dense(
+        rng.standard_normal((32, 32)).astype(np.float32), (16, 16))
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        maple_spmm(a, jnp.zeros((48, 16), jnp.float32))
+    with pytest.raises(ValueError, match="unknown schedule"):
+        maple_spmm(a, jnp.zeros((32, 16), jnp.float32), schedule="fastest")
+    with pytest.raises(ValueError):
+        maple_spmm(a, jnp.zeros((2, 3, 32, 16), jnp.float32))
+    with pytest.raises(ValueError):
+        plan_spmm(a, n_lanes=0)
+    with pytest.raises(ValueError):
+        plan_spmm(a, chunk=0)
+
+
+# --------------------------------------------------------------------------
+# model / serving integration
+# --------------------------------------------------------------------------
+
+def test_sparse_linear_layer():
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(0)
+    w = L.init_sparse_linear(key, 32, 48, block_shape=(8, 8),
+                             block_density=0.4)
+    wd = np.asarray(w.to_dense())
+    x3 = jnp.asarray(np.random.default_rng(0)
+                     .standard_normal((2, 5, 32)).astype(np.float32))
+    y = np.asarray(L.sparse_linear(w, x3, bn=16))
+    assert y.shape == (2, 5, 48)
+    np.testing.assert_allclose(y, np.asarray(x3) @ wd.T, rtol=1e-4,
+                               atol=1e-4)
+    # 2D and 1D inputs round-trip through the token-minor path
+    x2 = x3[0]
+    np.testing.assert_allclose(np.asarray(L.sparse_linear(w, x2, bn=16)),
+                               np.asarray(x2) @ wd.T, rtol=1e-4, atol=1e-4)
+    x1 = x3[0, 0]
+    np.testing.assert_allclose(np.asarray(L.sparse_linear(w, x1, bn=16)),
+                               np.asarray(x1) @ wd.T, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_logit_head():
+    from repro.models import layers as L
+    from repro.serve.engine import SparseLogitHead
+    key = jax.random.PRNGKey(1)
+    w = L.init_sparse_linear(key, 32, 64, block_shape=(8, 8),
+                             block_density=0.3)
+    head = SparseLogitHead.build(w, n_lanes=4)
+    hidden = jnp.asarray(np.random.default_rng(2)
+                         .standard_normal((2, 3, 32)).astype(np.float32))
+    logits = np.asarray(head(hidden))
+    assert logits.shape == (2, 3, 64)
+    np.testing.assert_allclose(
+        logits, np.asarray(hidden) @ np.asarray(w.to_dense()).T,
+        rtol=1e-4, atol=1e-4)
+    assert head.predicted_cycles["plan"] >= 1.0

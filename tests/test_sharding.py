@@ -7,6 +7,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as sh
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def mesh():
@@ -17,8 +19,7 @@ def mesh():
 
 def mesh16():
     """Abstract 16×16 mesh for rule checks (no devices needed)."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return sh.abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_divisibility_fallback():
