@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sparsity
 from repro.core.csr import CSR, BlockCSR
-from repro.core.gustavson import spmm_rowwise
-from repro.kernels import (local_block_attention, maple_spmm,
-                           maple_spmspm, moe_expert_gemm, plan_spmm)
+from repro.core.gustavson import dense_oracle, spmm_rowwise, spmspm_rowwise
+from repro.kernels import (local_block_attention, maple_spgemm, maple_spmm,
+                           maple_spmspm, moe_expert_gemm, plan_spgemm,
+                           plan_spmm)
 
 
 def _time(fn, *args, reps=3):
@@ -116,11 +118,48 @@ def schedule_sweep(rng):
     print(f"spmm_hostloop_g{g},{us:.0f},per_rhs_launch")
 
 
+def spgemm_sweep(rng):
+    """Two-phase sparse-output SpGEMM, paper protocol C = A·A, across the
+    same pattern axes as the SpMM sweep and priced with the same
+    ``core.maple`` model (matching table format): ``pred_plan`` is the
+    work makespan the lane schedule realizes, ``maple``/``row_atomic`` the
+    analytical schedules at equal MAC budget.  The gustavson/dense rows
+    are the jnp oracle twins; ``max_err`` pins the kernel to the dense
+    oracle.  B is never densified on the kernel path — the plan holds B as
+    compressed row panels.
+    """
+    m, n_lanes = 96, 8
+    for kind in ("uniform", "power_law", "banded"):
+        mask = sparsity.element_pattern_mask(kind, rng, m, m)
+        d = (mask * rng.standard_normal((m, m))).astype(np.float32)
+        a = CSR.from_dense(d)
+        for sched in ("naive", "row_atomic", "balanced"):
+            balance = {"balanced": "work", "row_atomic": "fibers",
+                       "naive": "none"}[sched]
+            plan = plan_spgemm(a, a, n_lanes=n_lanes, balance=balance)
+            fn = jax.jit(
+                lambda aa, p=plan: maple_spgemm(aa, aa, plan=p).value)
+            us = _time(fn, a, reps=5)
+            pc = plan.predicted_cycles()
+            print(f"spgemm_{kind}_{sched},{us:.0f},"
+                  f"pred_plan={pc['plan']:.0f}"
+                  f"/maple={pc['maple']:.0f}"
+                  f"/row_atomic={pc['row_atomic']:.0f}")
+        c = maple_spgemm(a, a)
+        err = float(np.abs(np.asarray(c.to_dense())
+                           - np.asarray(dense_oracle(a, a))).max())
+        us = _time(lambda: spmspm_rowwise(a, a), reps=5)
+        print(f"spgemm_{kind}_gustavson,{us:.0f},oracle")
+        us = _time(lambda: dense_oracle(a, a), reps=5)
+        print(f"spgemm_{kind}_dense,{us:.0f},max_err={err:.1e}")
+
+
 def run():
     rng = np.random.default_rng(0)
     print("name,us_per_call,derived")
 
     schedule_sweep(rng)
+    spgemm_sweep(rng)
 
     # BSR spmm across block densities (the Maple skip-rate table)
     m = k = n = 256

@@ -11,6 +11,41 @@ from repro.core import analyze_spgemm, compare, simulate, sparsity
 from repro.core.dataflows import matraptor_baseline, matraptor_maple
 
 
+def spgemm_kernel_sweep(n: int = 64, n_lanes: int = 8):
+    """Bridge the event model and the executable kernel.
+
+    Runs the paper's C = A·A protocol on uniform / power-law / banded
+    patterns through the two-phase sparse-output SpGEMM pipeline
+    (``plan_spgemm`` symbolic phase + ``maple_spgemm`` numeric kernel),
+    prices each plan with the shared ``core.maple`` cycle model, and pins
+    the kernel to ``gustavson.spmspm_rowwise`` and the dense oracle.
+    """
+    import numpy as np
+
+    from repro.core.csr import CSR
+    from repro.core.gustavson import dense_oracle, spmspm_rowwise
+    from repro.kernels import maple_spgemm, plan_spgemm
+
+    rng = np.random.default_rng(0)
+    print(f"\n=== sparse-output SpGEMM kernel sweep (C = A·A, n={n}) ===")
+    for kind in ("uniform", "power_law", "banded"):
+        mask = sparsity.element_pattern_mask(kind, rng, n, n)
+        d = (mask * rng.standard_normal((n, n))).astype(np.float32)
+        a = CSR.from_dense(d)
+        plan = plan_spgemm(a, a, n_lanes=n_lanes)
+        c = maple_spgemm(a, a, plan=plan)
+        cd = np.asarray(c.to_dense())
+        err = max(
+            float(np.abs(cd - np.asarray(dense_oracle(a, a))).max()),
+            float(np.abs(cd - np.asarray(spmspm_rowwise(a, a))).max()))
+        pc = plan.predicted_cycles()
+        st = plan.stats
+        print(f"  {kind:10s} nnz(A)={st.nnz_a:5d} P={st.partial_products:6d} "
+              f"nnz(C)={plan.nnz_c:5d} cycles plan={pc['plan']:.0f} "
+              f"maple={pc['maple']:.0f} row_atomic={pc['row_atomic']:.0f} "
+              f"max|dC|={err:.1e}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.1)
@@ -18,7 +53,13 @@ def main():
                     default=["wg", "sc", "fb"])
     ap.add_argument("--events", action="store_true",
                     help="print the raw event trace per config")
+    ap.add_argument("--spgemm", action="store_true",
+                    help="also run the executable sparse-output SpGEMM "
+                         "kernel sweep against the jnp oracles")
     args = ap.parse_args()
+
+    if args.spgemm:
+        spgemm_kernel_sweep()
 
     for ab in args.matrices:
         spec = sparsity.TABLE_I[ab]

@@ -10,6 +10,13 @@ arithmetic (0 contribution) and recognizable in metadata walks.
 ``BlockCSR`` is the TPU-granularity lift of the same structure (DESIGN §3.1):
 the "non-zero" unit becomes a ``(bm, bk)`` block and ``col_id`` a block-column
 index.  It is the metadata format consumed by the Pallas kernels.
+
+Beyond the containers, this module owns the *sorted-CSR compute utilities*
+that make CSR a real compute format for the SpGEMM pipeline: column-merge
+accumulation (:func:`merge_by_column`), upper-bound output-row sizing
+(:func:`spgemm_row_upper_bounds`), the capacity growth policy
+(:func:`grow_nnz_max`) and the ELL slot map (:func:`ell_slots`) that lets a
+kernel gather padded rows without ever densifying to ``(K, N)``.
 """
 
 from __future__ import annotations
@@ -198,3 +205,96 @@ class BlockCSR:
         """Host-side block density (fraction of non-zero blocks)."""
         nnzb = int(np.asarray(self.row_ptr)[-1])
         return nnzb / (self.n_block_rows * self.n_block_cols)
+
+
+# --------------------------------------------------------------------------
+# sorted-CSR compute utilities (host-side; the symbolic half of SpGEMM)
+# --------------------------------------------------------------------------
+
+def merge_by_column(cols, vals=None):
+    """Merge one row's (column, value) partials by column.
+
+    The accumulate phase of a row-wise product (paper Eq. (8)): partial
+    products targeting the same output column j' collapse into one output
+    non-zero.  Padded entries (``col < 0``) are dropped.  Returns the sorted
+    unique columns as int32 and, when ``vals`` is given, the per-column
+    accumulated values.
+
+    This is the *reference semantics* of the SpGEMM accumulate step — the
+    per-row oracle property tests pin the vectorized symbolic phase and
+    the Pallas kernel against — not a hot-path routine (the pipeline
+    batches the same merge over all rows at once in
+    ``kernels.schedule.plan_spgemm``).
+    """
+    cols = np.asarray(cols).astype(np.int64)
+    mask = cols >= 0
+    uniq, inv = np.unique(cols[mask], return_inverse=True)
+    if vals is None:
+        return uniq.astype(np.int32), None
+    vals = np.asarray(vals)[mask]
+    acc = np.zeros(uniq.size, dtype=vals.dtype)
+    np.add.at(acc, inv, vals)
+    return uniq.astype(np.int32), acc
+
+
+def spgemm_row_upper_bounds(a: "CSR", b: "CSR") -> np.ndarray:
+    """Per-row upper bound on ``nnz(C[i,:])`` for ``C = A @ B``.
+
+    Row i of C receives Σ_{k' ∈ nnz(A[i,:])} nnz(B[k',:]) partial products
+    (the paper's Eq. (3) restricted to one row), so its output row can never
+    exceed that — nor the matrix width.  ``plan_spgemm`` computes this
+    O(nnz(A)) bound first: it gates the O(P) exact-pattern expansion and is
+    recorded on the plan (``SpgemmPlan.row_upper``) for capacity planning.
+    """
+    a_rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnz_a = int(a_rptr[-1])
+    a_cols = np.asarray(a.col_id)[:nnz_a].astype(np.int64)
+    a_len = np.diff(a_rptr)
+    b_len = np.diff(np.asarray(b.row_ptr).astype(np.int64))
+    row_of = np.repeat(np.arange(a_len.size), a_len)
+    ub = np.bincount(row_of, weights=b_len[a_cols],
+                     minlength=a_len.size).astype(np.int64)
+    return np.minimum(ub, b.shape[1])
+
+
+def grow_nnz_max(required: int, current: int = 0, *, floor: int = 8) -> int:
+    """Geometric ``nnz_max`` growth policy.
+
+    JAX shapes are static, so every distinct capacity is a distinct compiled
+    program.  Growing geometrically from a small floor quantizes capacities
+    to powers of two of ``floor``: repeated calls with drifting nnz reuse the
+    same shapes (and jit cache entries) instead of recompiling per matrix.
+    ``current`` carries the existing capacity so growth is monotone.
+    """
+    if required < 0:
+        raise ValueError(f"required={required} < 0")
+    if floor < 1:
+        raise ValueError(f"floor={floor} < 1")
+    cap = max(int(current), floor)
+    while cap < required:
+        cap *= 2
+    return cap
+
+
+def ell_slots(row_ptr, width: int | None = None):
+    """Gather map from padded-CSR slots to an ``(n_rows, width)`` ELL grid.
+
+    Returns ``(idx, live)``: ``idx[i, t]`` is the index into the CSR nnz
+    arrays of row i's t-th entry (0 — any valid slot — where dead) and
+    ``live[i, t]`` marks real entries.  Host-side numpy over metadata, so
+    the *values* gather ``value[idx] * live`` stays traceable under jit —
+    this is how the numeric SpGEMM phase regularizes operands without
+    touching host copies of device values.
+    """
+    rptr = np.asarray(row_ptr).astype(np.int64)
+    lens = np.diff(rptr)
+    lmax = int(lens.max(initial=0))
+    if width is None:
+        width = max(lmax, 1)
+    elif lmax > width:
+        raise ValueError(f"width={width} < longest row ({lmax})")
+    width = max(int(width), 1)
+    offs = np.arange(width, dtype=np.int64)[None, :]
+    idx = rptr[:-1, None] + offs
+    live = offs < lens[:, None]
+    return np.where(live, idx, 0).astype(np.int32), live

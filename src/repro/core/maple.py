@@ -70,6 +70,43 @@ def _host(a) -> np.ndarray:
     return np.asarray(a)
 
 
+def expand_partials(a: CSR, b: CSR):
+    """Expand every partial product of ``C = A @ B`` to coordinates (Eq. 6).
+
+    One entry per partial product (P total), in A-metadata walk order:
+
+    * ``a_slot``  — index into A's live-nnz prefix that emitted it,
+    * ``out_row`` — output row i (= the A row of ``a_slot``),
+    * ``out_col`` — output column j' (= ``B.col_id`` of the B entry),
+    * ``b_off``   — offset of that B entry within its row ``B[k',:]``
+      (the ELL lane of the B panel — what the numeric kernel indexes).
+
+    This is the single source of truth for the Eq. (6) scatter: the event
+    model counts these coordinates (``analyze_spgemm``) and the SpGEMM
+    symbolic phase (``kernels.schedule.plan_spgemm``) turns them into the
+    output pattern and per-partial PSB positions.
+    """
+    a_rptr = _host(a.row_ptr).astype(np.int64)
+    b_rptr = _host(b.row_ptr).astype(np.int64)
+    nnz_a = int(a_rptr[-1])
+    a_cols = _host(a.col_id)[:nnz_a].astype(np.int64)
+    b_cols = _host(b.col_id)
+    a_row_len = np.diff(a_rptr)
+    b_row_len = np.diff(b_rptr)
+
+    per_nnz_work = b_row_len[a_cols]                    # (nnz_a,)
+    partials = int(per_nnz_work.sum())
+    a_row_of_nnz = np.repeat(np.arange(a_row_len.size), a_row_len)
+
+    a_slot = np.repeat(np.arange(nnz_a, dtype=np.int64), per_nnz_work)
+    out_row = np.repeat(a_row_of_nnz, per_nnz_work)
+    cum = np.concatenate([[0], np.cumsum(per_nnz_work)[:-1]])
+    b_off = np.arange(partials, dtype=np.int64) - np.repeat(cum, per_nnz_work)
+    starts = b_rptr[a_cols]
+    out_col = b_cols[np.repeat(starts, per_nnz_work) + b_off].astype(np.int64)
+    return a_slot, out_row, out_col, b_off
+
+
 def analyze_spgemm(a: CSR, b: CSR | None = None,
                    exact_output: bool = True) -> SpGEMMStats:
     """Walk CSR metadata of ``A`` (and ``B``; the paper uses B = A) and count
@@ -104,14 +141,11 @@ def analyze_spgemm(a: CSR, b: CSR | None = None,
 
     if exact_output and partials > 0:
         # expand all (i, j') coordinates: j' = B.col_id[base + t]  (Eq. 6)
-        out_i = np.repeat(a_row_of_nnz, per_nnz_work)
-        starts = b_rptr[a_cols]                       # (nnz_a,)
-        # within-group offsets 0..len-1 for each A-nonzero's B row segment
-        cum = np.concatenate([[0], np.cumsum(per_nnz_work)[:-1]])
-        within = np.arange(partials, dtype=np.int64) - np.repeat(cum, per_nnz_work)
-        out_j = b_cols[np.repeat(starts, per_nnz_work) + within].astype(np.int64)
+        _, out_i, out_j, _ = expand_partials(a, b)
         keys = out_i * b.shape[1] + out_j
         nnz_c = int(np.unique(keys).size)
+    elif partials == 0 or b.shape[1] == 0:
+        nnz_c = 0
     else:
         # expectation under uniform hashing of P balls into rows*cols bins,
         # computed per-row to respect row structure

@@ -139,3 +139,28 @@ def generate(spec: MatrixSpec, scale: float = 1.0, seed: int = 0,
 def table_i_clones(scale: float = 0.01, seed: int = 0) -> Dict[str, CSR]:
     """All 14 Table-I matrices at the given scale."""
     return {ab: generate(sp, scale=scale, seed=seed) for ab, sp in TABLE_I.items()}
+
+
+def element_pattern_mask(kind: str, rng: np.random.Generator,
+                         m: int, k: int) -> np.ndarray:
+    """Element-granular sparsity masks for the SpGEMM sweeps.
+
+    The three workload axes the benchmarks and the accelerator sim share
+    (one source of truth so they never desynchronize): ``uniform`` iid
+    density, ``power_law`` Zipf-ish row lengths (the skewed regime
+    work-balancing exists for), ``banded`` FEM-like locality.
+    """
+    if kind == "uniform":
+        mask = rng.random((m, k)) < 0.15
+    elif kind == "power_law":
+        mask = np.zeros((m, k), bool)
+        for i in range(m):
+            ln = max(1, int(round(k * (i + 1) ** -1.2)))
+            mask[i, rng.choice(k, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.abs(np.subtract.outer(np.arange(m), np.arange(k))) < 2
+    else:
+        raise ValueError(kind)
+    if not mask.any():
+        mask[0, 0] = True
+    return mask

@@ -4,11 +4,15 @@ on CPU; see each kernel's module docstring for the hardware mapping)."""
 from repro.kernels.ops import (
     csr_to_ell,
     local_block_attention,
+    maple_spgemm,
     maple_spmm,
     maple_spmspm,
     moe_expert_gemm,
 )
-from repro.kernels.schedule import SpmmPlan, bsr_stats, plan_spmm
+from repro.kernels.schedule import (ExecutionPlan, SpgemmPlan, SpmmPlan,
+                                    bsr_stats, plan_spgemm, plan_spmm)
 
-__all__ = ["maple_spmm", "maple_spmspm", "moe_expert_gemm", "csr_to_ell",
-           "local_block_attention", "SpmmPlan", "bsr_stats", "plan_spmm"]
+__all__ = ["maple_spmm", "maple_spgemm", "maple_spmspm", "moe_expert_gemm",
+           "csr_to_ell", "local_block_attention", "ExecutionPlan",
+           "SpmmPlan", "SpgemmPlan", "bsr_stats", "plan_spmm",
+           "plan_spgemm"]

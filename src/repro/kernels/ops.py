@@ -7,7 +7,12 @@ so the kernel bodies execute in Python for validation; False on real TPU).
 
 API:
   * :func:`maple_spmm`       — BlockCSR A × dense B      (MXU grain)
-  * :func:`maple_spmspm`     — padded-CSR A × CSR/dense B (element grain)
+  * :func:`maple_spgemm`     — CSR A × CSR B → padded CSR (two-phase
+                               symbolic/numeric; the paper's sparse-output
+                               row-wise product)
+  * :func:`maple_spmspm`     — padded-CSR A × CSR/dense B → dense
+                               (legacy; routes through maple_spgemm for
+                               CSR B)
   * :func:`moe_expert_gemm`  — expert-sorted tokens × stacked expert weights
 """
 
@@ -19,15 +24,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csr import CSR, BlockCSR
+from repro.core.csr import CSR, BlockCSR, grow_nnz_max
 from repro.kernels.block_attn import (block_attention_pallas,
                                       local_window_kv_map)
+from repro.kernels.maple_spgemm import maple_spgemm_pallas
 from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
                                       maple_spmm_pallas,
                                       maple_spmm_planned_pallas)
 from repro.kernels.maple_spmspm import maple_spmspm_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
-from repro.kernels.schedule import SpmmPlan, plan_spmm
+from repro.kernels.schedule import (SpgemmPlan, SpmmPlan, plan_spgemm,
+                                    plan_spmm)
 
 
 def _default_interpret() -> bool:
@@ -159,16 +166,29 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
 # element-granular CSR × CSR (paper protocol C = A×A)
 # --------------------------------------------------------------------------
 
-def csr_to_ell(a: CSR, max_row_len: int | None = None):
-    """Host-side CSR → ELL regularization (values/cols as (M, L))."""
+def csr_to_ell(a: CSR, max_row_len: int | None = None, *,
+               truncate: bool = False):
+    """Host-side CSR → ELL regularization (values/cols as (M, L)).
+
+    ``max_row_len`` narrower than the longest row drops that row's tail
+    entries — silent data loss — so it raises unless the caller opts in
+    with ``truncate=True``.
+    """
     rptr = np.asarray(a.row_ptr)
     vals = np.asarray(a.value)
     cols = np.asarray(a.col_id)
     m = a.shape[0]
     lens = np.diff(rptr)
     nnz = int(rptr[-1])
-    lmax = int(lens.max(initial=1)) if max_row_len is None else max_row_len
-    lmax = max(lmax, 1)
+    longest = int(lens.max(initial=0))
+    if max_row_len is None:
+        lmax = max(longest, 1)
+    else:
+        lmax = max(max_row_len, 1)
+        if longest > lmax and not truncate:
+            raise ValueError(
+                f"max_row_len={max_row_len} would drop entries of a row "
+                f"with {longest} non-zeros; pass truncate=True to opt in")
     ell_v = np.zeros((m, lmax), dtype=vals.dtype)
     ell_c = np.full((m, lmax), -1, dtype=np.int32)
     idx = np.arange(nnz)
@@ -180,14 +200,129 @@ def csr_to_ell(a: CSR, max_row_len: int | None = None):
     return jnp.asarray(ell_v), jnp.asarray(ell_c)
 
 
-def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:
-    """C = A_csr @ B via the element-granular Maple walk.
+def _has_traced_metadata(*arrays) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in arrays)
 
-    ``b`` may be a CSR (densified to row-addressable panels — what the BRB
-    sees after its fill) or an already-dense (K, N) array.
+
+def maple_spgemm(a: CSR, b: CSR, *, schedule: str = "balanced",
+                 n_lanes: int = 8, plan: SpgemmPlan | None = None,
+                 nnz_max: int | None = None,
+                 interpret: bool | None = None) -> CSR:
+    """C = A_csr @ B_csr → **padded CSR** via the two-phase Maple SpGEMM.
+
+    The symbolic phase (``kernels.schedule.plan_spgemm``) walks A and B
+    metadata on the host: exact output pattern, bounded PSB width, and the
+    Eq. (8) scatter position of every partial product.  The numeric phase
+    (``kernels.maple_spgemm``) then executes the row-wise product with B
+    held as compressed row panels — **B is never densified** — and the
+    result is compacted into a padded ``CSR`` (``col_id = -1`` pads,
+    capacity from ``core.csr.grow_nnz_max`` unless ``nnz_max`` pins it).
+
+    ``schedule`` selects how A rows are packed onto lanes:
+
+    * ``"balanced"`` (default) — LPT by *work* (Σ nnz(B[k',:]) per row,
+      the partial-product count that actually prices a row);
+    * ``"row_atomic"`` — LPT by nnz(A[i,:]) (the fiber-count proxy the
+      MatRaptor-style baseline would use; rows are atomic under every
+      SpGEMM schedule — the names mirror ``maple_spmm`` dispatch);
+    * ``"naive"`` — one lane, rows in order.
+
+    Planning (the symbolic phase) reads host metadata, so under ``jax.jit``
+    pass a prebuilt ``plan`` for the jitted call to close over; without one
+    this raises instead of silently densifying.
     """
     if interpret is None:
         interpret = _default_interpret()
+    if not isinstance(a, CSR) or not isinstance(b, CSR):
+        raise TypeError("maple_spgemm takes CSR operands; for dense B use "
+                        "maple_spmm / gustavson.spmm_rowwise")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(
+            f"contraction mismatch: A is {a.shape}, B is {b.shape}")
+    if schedule not in ("balanced", "row_atomic", "naive"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    if plan is None:
+        if _has_traced_metadata(a.row_ptr, a.col_id, b.row_ptr, b.col_id):
+            raise ValueError(
+                "maple_spgemm's symbolic phase needs host metadata; under "
+                "jit, prebuild the plan with kernels.schedule.plan_spgemm "
+                "and pass it so the jitted call closes over it")
+        balance = {"balanced": "work", "row_atomic": "fibers",
+                   "naive": "none"}[schedule]
+        plan = plan_spgemm(a, b, n_lanes=n_lanes, balance=balance)
+    else:
+        if plan.shape_a != a.shape or plan.shape_b != b.shape:
+            raise ValueError(
+                f"plan is for {plan.shape_a} @ {plan.shape_b}, operands "
+                f"are {a.shape} @ {b.shape}")
+        if plan.a_gather.size and \
+                int(plan.a_gather.max(initial=0)) >= a.nnz_max:
+            raise ValueError("plan indexes A slots beyond the operand's "
+                             "capacity — was it built for this pattern?")
+        if plan.b_gather.size and \
+                int(plan.b_gather.max(initial=0)) >= b.nnz_max:
+            raise ValueError("plan indexes B slots beyond the operand's "
+                             "capacity — was it built for this pattern?")
+    m, n = a.shape[0], b.shape[1]
+    nnz_c = plan.nnz_c
+    cap = grow_nnz_max(nnz_c) if nnz_max is None else nnz_max
+    if cap < nnz_c:
+        raise ValueError(f"nnz_max={cap} < nnz(C)={nnz_c}")
+
+    if nnz_c == 0:
+        # nothing to compute (all-zero pattern, or a zero-dimension
+        # operand the kernel's >= 1-row panels could not even represent)
+        value = jnp.zeros((cap,), a.value.dtype)
+    else:
+        # numeric phase: traced value gathers over the plan's (static)
+        # slot maps — ELL-regularized operands, no host copies, no
+        # densification.
+        a_vals = jnp.where(jnp.asarray(plan.a_live),
+                           a.value[jnp.asarray(plan.a_gather)], 0)
+        b_ell = jnp.where(jnp.asarray(plan.b_live),
+                          b.value[jnp.asarray(plan.b_gather)], 0)
+        ell_out = maple_spgemm_pallas(
+            a_vals.reshape(-1, 1), b_ell, jnp.asarray(plan.scatter_pos),
+            jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), m=m, lc=plan.lc,
+            interpret=interpret)[:m]                   # drop sacrificial row
+
+        # compact ELL rows into the padded-CSR value vector (pattern is
+        # host metadata from the symbolic phase; only the values gather is
+        # traced)
+        lens = np.diff(plan.out_row_ptr)
+        rows = np.zeros(cap, np.int32)
+        offs = np.zeros(cap, np.int32)
+        rows[:nnz_c] = np.repeat(np.arange(m, dtype=np.int32), lens)
+        offs[:nnz_c] = (np.arange(nnz_c, dtype=np.int64)
+                        - np.repeat(plan.out_row_ptr[:-1], lens)
+                        ).astype(np.int32)
+        live = np.arange(cap) < nnz_c
+        value = jnp.where(jnp.asarray(live),
+                          ell_out[jnp.asarray(rows), jnp.asarray(offs)], 0)
+    col_id = np.full(cap, -1, np.int32)
+    col_id[:nnz_c] = plan.out_cols
+    return CSR(value=value, col_id=jnp.asarray(col_id),
+               row_ptr=jnp.asarray(plan.out_row_ptr.astype(np.int32)),
+               shape=(m, n))
+
+
+def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:
+    """C = A_csr @ B via the element-granular Maple walk → dense (M, N).
+
+    .. deprecated:: prefer :func:`maple_spgemm`, which keeps the output
+       sparse.  When ``b`` is a CSR with host metadata this routes through
+       the two-phase SpGEMM kernel (B stays compressed; only the *result*
+       is densified to preserve this function's dense return contract).
+       The legacy positional-PSB kernel remains for explicitly dense ``b``
+       — the BRB-after-fill view — and for traced metadata under jit.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if isinstance(b, CSR) and not _has_traced_metadata(
+            a.row_ptr, a.col_id, b.row_ptr, b.col_id):
+        return maple_spgemm(a, b, interpret=interpret).to_dense()
     values, col_ids = csr_to_ell(a)
     b_rows = b.to_dense() if isinstance(b, CSR) else b
     return maple_spmspm_pallas(values, col_ids, b_rows, interpret=interpret)

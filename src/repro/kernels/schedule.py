@@ -1,4 +1,5 @@
-"""Load-balanced execution planning for the Maple SpMM kernels.
+"""Load-balanced execution planning for the Maple kernels — the unified
+plan layer shared by SpMM (BSR × dense) and SpGEMM (CSR × CSR → CSR).
 
 The analytical model (``core.maple.maple_pe_cycles``) makes the paper's
 central point quantitative: a row-wise product schedule is lower-bounded by
@@ -8,45 +9,61 @@ because it is *not* row-atomic.  The seed Pallas kernel, however, walked
 blocks in BlockCSR construction order — one unsplit block-row after the
 next — which is the MatRaptor-style row-atomic baseline, not Maple.
 
-This module closes that gap at kernel granularity.  :func:`plan_spmm`
-turns BlockCSR metadata into a static lane schedule:
+This module closes that gap at kernel granularity with one abstraction:
 
-* heavy block-rows are **split into bounded-size row-chunks** (the multi-MAC
-  ``m`` knob realized as parallel accumulation lanes — each lane owns a PSB
-  tile, so chunks of the same row accumulate concurrently and are reduced
-  across lanes at the end, removing the ``max_row`` term of the cycle
-  model);
-* chunks are packed onto ``n_lanes`` lanes with an LPT greedy (longest
-  chunk first onto the least-loaded lane), bounding the makespan at
-  ``(2 - 1/L)×`` optimal;
-* within a lane, chunks are **sorted by block-row** so PSB revisits stay
-  contiguous — each (lane, row) run zeroes its accumulator once and flushes
-  once;
-* padded BlockCSR slots (``block_col = -1``) are dropped from the plan
-  entirely instead of being streamed through the MXU as zero work.
+:class:`ExecutionPlan` — a static lane schedule.  Per lane ``l`` / step
+``s`` it records which operand slot to consume (``order``), which output
+row the step accumulates into (``step_row``), which panel of B to fetch
+(``step_col``, ``-1`` on pad steps) and which rows each lane flushes
+(``written``).  Work items are LPT-packed (longest first onto the
+least-loaded lane, a ``(2 - 1/L)×``-optimal greedy) and each lane is
+row-sorted so every (lane, row) PSB run zeroes once and flushes once.
+Padded container slots are dropped from the plan entirely instead of being
+streamed as zero work.
 
-The plan is host-side numpy over *static metadata* (the sparsity pattern),
-so planning composes with jit the same way BlockCSR construction does: the
-pattern is fixed at trace time, the payload is traced.
+Two specializations:
 
-One source of truth with the analytics: :meth:`SpmmPlan.predicted_cycles`
+* :class:`SpmmPlan` (:func:`plan_spmm`) — block granularity.  Heavy
+  block-rows are **split into bounded-size row-chunks** (the multi-MAC
+  ``m`` knob realized as parallel accumulation lanes; chunks of one row
+  accumulate concurrently and are reduced across lanes at the end,
+  removing the ``max_row`` term of the cycle model).
+* :class:`SpgemmPlan` (:func:`plan_spgemm`) — element granularity, the
+  sparse-output C = A·B path.  Construction *is* the **symbolic phase** of
+  the two-phase SpGEMM protocol: it computes the exact output sparsity
+  pattern (``out_row_ptr`` / ``out_cols``) and the per-partial PSB scatter
+  positions from A and B metadata alone, then balances whole A rows over
+  lanes by **work** — Σ nnz(B[k',:]) per row, the quantity
+  ``core.maple.analyze_spgemm`` already counts — rather than by nnz(A)
+  alone.  (Rows stay atomic here because each output row owns one
+  column-indexed PSB; the balancing axis is which lane gets which rows.)
+
+Plans are host-side numpy over *static metadata* (the sparsity pattern),
+so planning composes with jit the same way container construction does:
+the pattern is fixed at trace time, the payload is traced.
+
+One source of truth with the analytics: :meth:`ExecutionPlan.predicted_cycles`
 prices the realized schedule and both paper schedules with the *same*
 :func:`core.maple.maple_pe_cycles` / :func:`core.maple.baseline_pe_cycles`
-used by the event model, over stats from :func:`bsr_stats` (which is
-``analyze_spgemm`` applied to the block pattern).
+used by the event model, over :func:`core.maple.analyze_spgemm` stats
+(:func:`bsr_stats` lifts them to the block pattern for SpMM).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, TypeVar
 
 import numpy as np
 
-from repro.core.csr import CSR, BlockCSR
+from repro.core.csr import (CSR, BlockCSR, ell_slots,
+                            spgemm_row_upper_bounds)
 from repro.core.maple import (SpGEMMStats, analyze_spgemm,
-                              baseline_pe_cycles, maple_pe_cycles)
+                              baseline_pe_cycles, expand_partials,
+                              maple_pe_cycles)
+
+_T = TypeVar("_T")
 
 
 def bsr_stats(a: BlockCSR) -> SpGEMMStats:
@@ -71,34 +88,55 @@ def bsr_stats(a: BlockCSR) -> SpGEMMStats:
     return analyze_spgemm(pattern, eye)
 
 
+def _lpt_pack(weighted: Sequence[Tuple[int, _T]],
+              n_lanes: int) -> Tuple[List[List[_T]], np.ndarray]:
+    """LPT greedy: pre-sorted ``(weight, item)`` onto the least-loaded lane.
+
+    Caller sorts (longest first, deterministic tie-break); ties across
+    equally-loaded lanes resolve to the lowest lane index.  Returns the
+    per-lane item lists and the realized per-lane loads.
+    """
+    heap = [(0, l) for l in range(n_lanes)]  # already heap-ordered
+    lanes: List[List[_T]] = [[] for _ in range(n_lanes)]
+    loads = np.zeros(n_lanes, np.int64)
+    for w, item in weighted:
+        load, l = heapq.heappop(heap)
+        lanes[l].append(item)
+        loads[l] += int(w)
+        heapq.heappush(heap, (load + int(w), l))
+    return lanes, loads
+
+
 @dataclasses.dataclass(frozen=True)
-class SpmmPlan:
-    """A static lane schedule for ``maple_spmm`` over one BlockCSR operand.
+class ExecutionPlan:
+    """A static lane schedule for one Maple kernel launch.
 
     Arrays are host numpy (they parameterize the grid and the scalar
-    prefetch, like BlockCSR metadata).  Layout, per lane ``l`` and step
-    ``s``:
+    prefetch, like the sparse containers' metadata).  Layout, per lane
+    ``l`` and step ``s``:
 
-    * ``order[l, s]``    — index into ``a.blocks`` to multiply at this step
-      (0 on pad steps; pad steps are identified by ``step_col == -1`` and
+    * ``order[l, s]``    — operand slot to consume at this step (an index
+      into ``a.blocks`` for SpMM, a flat ELL slot ``i·La + t`` for SpGEMM;
+      0 on pad steps — pad steps are identified by ``step_col == -1`` and
       contribute nothing),
-    * ``step_row[l, s]`` — output block-row the step accumulates into; pad
-      steps repeat the lane's last real row so each (lane, row) run stays
-      one contiguous zero-once/flush-once PSB visit,
-    * ``step_col[l, s]`` — B block-column to fetch, ``-1`` on pad steps
-      (the BlockCSR padding protocol),
-    * ``written[l, r]``  — True iff lane ``l`` flushes a PSB tile for block
-      row ``r``; the wrapper zero-masks unwritten (lane, row) tiles before
-      reducing over lanes.
+    * ``step_row[l, s]`` — output row the step accumulates into (pad-step
+      conventions are per-specialization — see the subclasses),
+    * ``step_col[l, s]`` — which B panel to fetch, ``-1`` on pad steps
+      (the container padding protocol),
+    * ``written[l, r]``  — True iff lane ``l`` flushes a PSB for row ``r``.
+
+    ``n_real_steps`` counts live steps; ``utilization`` the live fraction
+    of issued slots.  ``predicted_cycles`` prices the realized schedule
+    and both paper schedules with the shared ``core.maple`` model.
     """
 
     order: np.ndarray      # (n_lanes, steps) int32
     step_row: np.ndarray   # (n_lanes, steps) int32
     step_col: np.ndarray   # (n_lanes, steps) int32, -1 on pads
-    written: np.ndarray    # (n_lanes, n_block_rows) bool
-    chunk: int             # max blocks per row-chunk (the m knob)
-    n_block_rows: int
-    n_real_steps: int      # live steps (== nnz blocks of the operand)
+    written: np.ndarray    # (n_lanes, n_rows) bool
+    chunk: int             # max slots per row-chunk (0 = rows atomic)
+    n_rows: int
+    n_real_steps: int      # live steps scheduled
     stats: SpGEMMStats
 
     @property
@@ -107,31 +145,59 @@ class SpmmPlan:
 
     @property
     def steps(self) -> int:
-        """Realized makespan: block-MACs issued per lane (incl. bubbles)."""
+        """Realized makespan: slots issued per lane (incl. bubbles)."""
         return self.order.shape[1]
 
     @property
     def utilization(self) -> float:
-        """Live fraction of issued block-MAC slots."""
+        """Live fraction of issued slots."""
         return self.n_real_steps / max(self.n_lanes * self.steps, 1)
+
+    def _realized_makespan(self) -> float:
+        """What the grid actually executes, in the plan's work unit."""
+        return float(self.steps)
 
     def predicted_cycles(self) -> Dict[str, float]:
         """Cycle predictions that share the analytical model's arithmetic.
 
-        ``plan``       — this schedule's realized makespan (block-steps per
-                         lane, what the kernel grid actually executes);
+        ``plan``       — this schedule's realized makespan (work per lane,
+                         what the kernel grid actually executes);
         ``maple``      — ``maple_pe_cycles`` with the lane array acting as
                          one m = n_lanes Maple PE (row pools drained at
-                         n_lanes blocks/cycle — the paper's §IV schedule);
+                         n_lanes work-units/cycle — the paper's §IV
+                         schedule);
         ``row_atomic`` — ``baseline_pe_cycles`` with rows pinned to lanes
-                         (the MatRaptor bound the plan is beating).
+                         (the MatRaptor bound).
         """
         return {
-            "plan": float(self.steps),
+            "plan": self._realized_makespan(),
             "maple": maple_pe_cycles(self.stats, macs_per_pe=self.n_lanes,
                                      n_pes=1),
             "row_atomic": baseline_pe_cycles(self.stats, n_pes=self.n_lanes),
         }
+
+
+class SpmmPlan(ExecutionPlan):
+    """Block-granular plan for ``maple_spmm`` over one BlockCSR operand.
+
+    The work unit is one non-zero (bm, bk) block-MAC; ``order`` gathers
+    into ``a.blocks`` and ``step_col`` selects B block-columns.  Pad steps
+    repeat the lane's last real row so each (lane, row) run stays one
+    contiguous zero-once/flush-once PSB visit, and the wrapper zero-masks
+    tiles ``written`` says were never flushed before reducing over lanes
+    (the cross-lane reduction that merges chunks of a split row).
+    """
+
+    def __init__(self, *, order: np.ndarray, step_row: np.ndarray,
+                 step_col: np.ndarray, written: np.ndarray, chunk: int,
+                 n_block_rows: int, n_real_steps: int, stats: SpGEMMStats):
+        super().__init__(order=order, step_row=step_row, step_col=step_col,
+                         written=written, chunk=chunk, n_rows=n_block_rows,
+                         n_real_steps=n_real_steps, stats=stats)
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.n_rows
 
 
 def _default_chunk(nnzb: int, n_lanes: int) -> int:
@@ -177,12 +243,7 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
 
     # 2. LPT packing: longest chunk first onto the least-loaded lane.
     chunks.sort(key=lambda c: (-(c[2] - c[1]), c[0], c[1]))
-    heap = [(0, l) for l in range(n_lanes)]
-    lanes: List[List[Tuple[int, int, int]]] = [[] for _ in range(n_lanes)]
-    for c in chunks:
-        load, l = heapq.heappop(heap)
-        lanes[l].append(c)
-        heapq.heappush(heap, (load + (c[2] - c[1]), l))
+    lanes, _ = _lpt_pack([(c[2] - c[1], c) for c in chunks], n_lanes)
 
     # 3. PSB contiguity: same-row chunks adjacent within each lane.
     for lane in lanes:
@@ -214,3 +275,167 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
     return SpmmPlan(order=order, step_row=step_row, step_col=step_col,
                     written=written, chunk=chunk, n_block_rows=gm,
                     n_real_steps=n_real, stats=stats)
+
+
+# --------------------------------------------------------------------------
+# SpGEMM: the symbolic phase + work-balanced lane schedule
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmPlan(ExecutionPlan):
+    """Element-granular plan for ``maple_spgemm`` — symbolic phase output.
+
+    On top of the lane schedule (one step = one live A non-zero consuming
+    the whole B row its ``col_id`` selects; ``step_col`` is that B row id),
+    the plan carries everything the numeric phase needs that can be derived
+    from *metadata alone*:
+
+    * ``out_row_ptr`` / ``out_cols`` — the **exact** output pattern of C,
+      sorted by column within each row (padded-CSR contract: the wrapper
+      pads ``col_id`` with ``-1`` up to capacity); ``row_upper`` is the
+      O(nnz_a) a-priori bound (``core.csr.spgemm_row_upper_bounds``) the
+      phase starts from — it gates the O(P) expansion and is kept for
+      capacity planning;
+    * ``lc`` — the bounded per-row PSB width = the longest output row;
+    * ``scatter_pos[i·la + t, u]`` — position within output row i of the
+      partial product A[i, t-th nnz] · B[k', u-th nnz], ``-1`` where dead:
+      the paper's Eq. (8) scatter by j' made explicit, precomputed so the
+      kernel's column-indexed PSB needs no runtime search;
+    * ``a_gather``/``a_live``, ``b_gather``/``b_live`` — ELL slot maps
+      (``core.csr.ell_slots``) so the numeric phase regularizes *values*
+      with a traced gather, never touching host copies;
+    * ``lane_work`` — realized partial products per lane (the balancing
+      target).
+
+    Pad steps point ``step_row`` at the **sacrificial row** ``n_rows`` (the
+    numeric kernel allocates one extra output row and slices it off), so an
+    idle lane can never clobber a real row.
+
+    Rows are atomic here (``chunk = 0``): each output row owns one
+    column-indexed PSB, so the balancing axis is which lane gets which
+    rows — weighted by work, not by nnz(A).
+    """
+
+    out_row_ptr: np.ndarray   # (n_rows + 1,) int64 — exact C pattern
+    out_cols: np.ndarray      # (nnz_c,) int32, column-sorted within rows
+    row_upper: np.ndarray     # (n_rows,) int64 — a-priori nnz(C[i,:]) bound
+    lc: int                   # PSB width = longest output row (>= 1)
+    scatter_pos: np.ndarray   # (n_rows * la, lb) int32, -1 dead
+    a_gather: np.ndarray      # (n_rows * la,) int32 — slot -> A nnz index
+    a_live: np.ndarray        # (n_rows * la,) bool
+    b_gather: np.ndarray      # (n_rows_b, lb) int32
+    b_live: np.ndarray        # (n_rows_b, lb) bool
+    la: int                   # ELL width of A
+    lb: int                   # ELL width of B (panel width)
+    lane_work: np.ndarray     # (n_lanes,) int64 — partial products per lane
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+
+    @property
+    def nnz_c(self) -> int:
+        return int(self.out_row_ptr[-1])
+
+    def _realized_makespan(self) -> float:
+        # Work-unit makespan: the busiest lane's partial products — each
+        # scheduled slot costs its B-row length, not one flat step.
+        return float(self.lane_work.max(initial=0))
+
+
+def plan_spgemm(a: CSR, b: CSR, *, n_lanes: int = 8,
+                balance: str = "work") -> SpgemmPlan:
+    """Symbolic SpGEMM phase: exact C pattern + work-balanced lane schedule.
+
+    ``balance`` selects the row weight for LPT lane packing:
+
+    * ``"work"``   — Σ nnz(B[k',:]) per A row (the partial-product count
+      ``analyze_spgemm`` reports; the balanced default),
+    * ``"fibers"`` — nnz(A[i,:]) (the MatRaptor-style proxy that ignores B;
+      exposed so benchmarks can price why work-weighting matters),
+    * ``"none"``   — single lane, rows in order (the naive walk).
+
+    Host-side over metadata; values are never read, so the plan can be
+    built once per sparsity pattern and closed over by a jitted call.
+    """
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes={n_lanes} < 1")
+    if balance not in ("work", "fibers", "none"):
+        raise ValueError(f"unknown balance {balance!r}")
+    m, n = a.shape[0], b.shape[1]
+    a_rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnz_a = int(a_rptr[-1])
+    a_cols = np.asarray(a.col_id).astype(np.int32)
+    a_len = np.diff(a_rptr)
+    b_len = np.diff(np.asarray(b.row_ptr).astype(np.int64))
+    # the plan computes the exact pattern itself below — don't pay for the
+    # O(P log P) expansion twice; stats.nnz_c is patched to exact after.
+    stats = analyze_spgemm(a, b, exact_output=False)
+
+    # -- symbolic: ELL slot maps, exact output pattern, scatter positions
+    la = max(int(a_len.max(initial=0)), 1)
+    lb = max(int(b_len.max(initial=0)), 1)
+    a_gather, a_live = ell_slots(a.row_ptr, la)         # (m, la)
+    b_gather, b_live = ell_slots(b.row_ptr, lb)         # (k, lb)
+
+    # O(nnz_a) pre-bound: gates the O(P) expansion and caps row capacity
+    row_upper = spgemm_row_upper_bounds(a, b)
+    scatter = np.full((m * la, lb), -1, np.int32)
+    out_row_ptr = np.zeros(m + 1, np.int64)
+    if row_upper.sum() > 0:
+        a_slot, out_i, out_j, b_off = expand_partials(a, b)
+        keys = out_i * np.int64(n) + out_j
+        uniq, gpos = np.unique(keys, return_inverse=True)
+        out_cols = (uniq % n).astype(np.int32)
+        np.cumsum(np.bincount((uniq // n).astype(np.int64), minlength=m),
+                  out=out_row_ptr[1:])
+        a_off = a_slot - a_rptr[out_i]                  # ELL lane of A slot
+        scatter[out_i * la + a_off, b_off] = \
+            (gpos - out_row_ptr[out_i]).astype(np.int32)
+    else:
+        out_cols = np.zeros(0, np.int32)
+    stats = dataclasses.replace(stats, nnz_c=int(out_cols.size))
+    lc = max(int(np.diff(out_row_ptr).max(initial=0)), 1)
+
+    # -- lane schedule: whole rows, LPT by the chosen weight
+    rows = [i for i in range(m) if a_len[i] > 0]
+    if balance == "none":
+        n_lanes = 1
+        lanes: List[List[int]] = [rows]
+    else:
+        weight = stats.row_partials if balance == "work" else a_len
+        weighted = sorted(((int(weight[i]), i) for i in rows),
+                          key=lambda t: (-t[0], t[1]))
+        lanes, _ = _lpt_pack(weighted, n_lanes)
+        for lane in lanes:
+            lane.sort()
+
+    steps = max(1, max((sum(int(a_len[i]) for i in lane) for lane in lanes),
+                       default=0))
+    order = np.zeros((n_lanes, steps), np.int32)
+    step_row = np.full((n_lanes, steps), m, np.int32)   # pads -> row m
+    step_col = np.full((n_lanes, steps), -1, np.int32)
+    written = np.zeros((n_lanes, m), bool)
+    lane_work = np.zeros(n_lanes, np.int64)
+    n_real = 0
+    for l, lane in enumerate(lanes):
+        t = 0
+        for i in lane:
+            ln = int(a_len[i])
+            lo = int(a_rptr[i])
+            order[l, t:t + ln] = i * la + np.arange(ln, dtype=np.int32)
+            step_row[l, t:t + ln] = i
+            step_col[l, t:t + ln] = a_cols[lo:lo + ln]
+            written[l, i] = True
+            lane_work[l] += int(stats.row_partials[i])
+            t += ln
+        n_real += t
+
+    return SpgemmPlan(
+        order=order, step_row=step_row, step_col=step_col, written=written,
+        chunk=0, n_rows=m, n_real_steps=n_real, stats=stats,
+        out_row_ptr=out_row_ptr, out_cols=out_cols, row_upper=row_upper,
+        lc=lc,
+        scatter_pos=scatter, a_gather=a_gather.reshape(-1),
+        a_live=a_live.reshape(-1), b_gather=b_gather, b_live=b_live,
+        la=la, lb=lb, lane_work=lane_work, shape_a=a.shape, shape_b=b.shape)
