@@ -19,7 +19,7 @@ from repro.core.csr import CSR, BlockCSR
 from repro.core.gustavson import dense_oracle, spmm_rowwise, spmspm_rowwise
 from repro.kernels import (local_block_attention, maple_spgemm, maple_spmm,
                            maple_spmspm, moe_expert_gemm, plan_spgemm,
-                           plan_spmm)
+                           plan_spmm, plan_spmm_vjp)
 
 
 def _time(fn, *args, reps=3):
@@ -154,12 +154,69 @@ def spgemm_sweep(rng):
         print(f"spgemm_{kind}_dense,{us:.0f},max_err={err:.1e}")
 
 
+def autodiff_sweep(rng):
+    """Fwd+bwd through the differentiable kernels, per sparsity pattern.
+
+    The backward of the SpMM is two more sparse passes — ``dB = A^T @ dC``
+    on the cached transpose-side plan and the block SDDMM for ``dA`` — so
+    the interesting number next to measured time is the *predicted* cycle
+    count from the same ``core.maple`` model the forward sweep prints,
+    now **counting the A^T pass** (``SpmmTrainPlan.predicted_cycles``:
+    ``plan = fwd + A^T`` lane makespans; the SDDMM revisits the forward's
+    block set, priced by the fwd entry).  The SpGEMM rows time the
+    value-level VJP (element SDDMM + transposed-operand scatter) under a
+    prebuilt symbolic plan.
+    """
+    gm = gk = 16
+    bm = bk = 16
+    n, n_lanes = 128, 8
+    for kind in ("uniform", "power_law", "banded"):
+        mask = _pattern_mask(kind, rng, gm, gk)
+        d = _masked_dense(rng, mask, bm, bk)
+        a = BlockCSR.from_dense(d, (bm, bk))
+        b = jnp.asarray(rng.standard_normal((gk * bk, n)).astype(np.float32))
+        # forward-only vs fwd+bwd on the same train plan: the gap is the
+        # A^T pass + SDDMM the VJP adds.
+        tp = plan_spmm_vjp(a, n_lanes=n_lanes)
+        fwd = jax.jit(lambda blk, bb, w=a: maple_spmm(
+            BlockCSR(blk, w.block_col, w.block_row, w.row_ptr, w.shape,
+                     w.block_shape), bb, plan=tp))
+        us_f = _time(fwd, a.blocks, b, reps=10)
+        grad = jax.jit(jax.grad(
+            lambda blk, bb, w=a: jnp.sum(maple_spmm(
+                BlockCSR(blk, w.block_col, w.block_row, w.row_ptr, w.shape,
+                         w.block_shape), bb, plan=tp) ** 2),
+            argnums=(0, 1)))
+        us = _time(lambda blk, bb: grad(blk, bb)[0], a.blocks, b, reps=10)
+        pc = tp.predicted_cycles()
+        print(f"spmm_grad_{kind},{us:.0f},"
+              f"fwd_us={us_f:.0f}/pred_fwd={pc['fwd_plan']:.0f}"
+              f"/pred_at={pc['at_plan']:.0f}")
+
+    m = 96
+    for kind in ("uniform", "power_law", "banded"):
+        mask = sparsity.element_pattern_mask(kind, rng, m, m)
+        d = (mask * rng.standard_normal((m, m))).astype(np.float32)
+        a = CSR.from_dense(d)
+        plan = plan_spgemm(a, a, n_lanes=8)
+        grad = jax.jit(jax.grad(
+            lambda av, w=a: jnp.sum(maple_spgemm(
+                CSR(av, w.col_id, w.row_ptr, w.shape),
+                CSR(av, w.col_id, w.row_ptr, w.shape),
+                plan=plan).value ** 2)))
+        us = _time(grad, a.value, reps=5)
+        pc = plan.predicted_cycles()
+        print(f"spgemm_grad_{kind},{us:.0f},"
+              f"pred_plan={pc['plan']:.0f}/maple={pc['maple']:.0f}")
+
+
 def run():
     rng = np.random.default_rng(0)
     print("name,us_per_call,derived")
 
     schedule_sweep(rng)
     spgemm_sweep(rng)
+    autodiff_sweep(rng)
 
     # BSR spmm across block densities (the Maple skip-rate table)
     m = k = n = 256

@@ -22,12 +22,16 @@ from repro.models import lm
 from repro.train import OptimizerConfig, init_opt_state, make_train_step
 
 
-def lm_125m() -> ModelConfig:
+def lm_125m(sparse_mlp: bool = False) -> ModelConfig:
     return ModelConfig(
-        name="lm-125m", family="dense",
+        name="lm-125m-sparse" if sparse_mlp else "lm-125m", family="dense",
         n_layers=10, d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
         d_ff=2560, vocab_size=50_304, qk_norm=True,
         vocab_pad_multiple=64,
+        # --sparse-mlp: train the Maple kernel end-to-end — every MLP down
+        # projection is a BlockCSR driven by maple_spmm, with gradients
+        # through the A^T pass + block SDDMM (kernels/README.md §autodiff)
+        sparse_mlp=sparse_mlp, sparse_block=(64, 64), sparse_density=0.25,
     )
 
 
@@ -39,17 +43,28 @@ def main():
     ap.add_argument("--micro-batches", type=int, default=2)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--sparse-mlp", action="store_true",
+                    help="block-sparse trainable MLP down projections "
+                         "(Maple kernels fwd+bwd)")
     args = ap.parse_args()
 
-    cfg = lm_125m()
+    cfg = lm_125m(sparse_mlp=args.sparse_mlp)
     print(f"config: {cfg.name}, params ≈ {cfg.param_count():,}")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    # one host-side symbolic pass per weight pattern: the jitted step
+    # closes over the shared fwd+bwd plan (None for dense configs)
+    mlp_plan = lm.sparse_mlp_plan(params)
+    if mlp_plan is not None:
+        pc = mlp_plan.predicted_cycles()
+        print(f"sparse mlp plan: fwd {pc['fwd_plan']:.0f} + "
+              f"A^T {pc['at_plan']:.0f} block-MACs/lane predicted")
     ocfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=5,
                            total_steps=max(args.steps, 100))
     opt = init_opt_state(ocfg, params)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                       global_batch=args.global_batch)
-    step_fn = jax.jit(make_train_step(cfg, ocfg, args.micro_batches))
+    step_fn = jax.jit(make_train_step(cfg, ocfg, args.micro_batches,
+                                      mlp_plan=mlp_plan))
 
     tokens_per_step = args.seq_len * args.global_batch
     for s in range(args.steps):

@@ -60,6 +60,15 @@ class ModelConfig:
     vocab_pad_multiple: int = 2048
     moe_capacity_factor: float = 1.25
     moe_impl: str = "gspmd"       # "gspmd" | "ep_a2a" (shard_map a2a EP)
+    # block-sparse MLP (the Maple kernel as a *trainable* layer): the MLP
+    # down-projection becomes a BlockCSR weight driven by maple_spmm.  The
+    # block mask is sampled once from `sparse_mask_seed` and shared by all
+    # layers, so the stacked (scanned) weights agree on one pattern and a
+    # single SpmmTrainPlan (see models.lm.sparse_mlp_plan) serves them all.
+    sparse_mlp: bool = False
+    sparse_block: Tuple[int, int] = (64, 64)
+    sparse_density: float = 0.25
+    sparse_mask_seed: int = 0
     # training defaults
     train_microbatches: int = 1
     bf16_first_moment: bool = False   # Adam m in bf16 (giant configs)

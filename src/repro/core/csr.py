@@ -32,7 +32,17 @@ import numpy as np
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class CSR:
-    """Padded CSR matrix.  Shapes are static; ``nnz`` is traced."""
+    """Padded CSR matrix.  Shapes are static; ``nnz`` is traced.
+
+    **Pad contract** (every producer must uphold it, every consumer may
+    rely on it): slots at index >= ``nnz`` carry ``col_id = -1`` *and*
+    ``value = 0``.  Consumers mask on ``col_id >= 0`` — they never depend
+    on out-of-bounds scatter/gather semantics of the backend (XLA happens
+    to drop out-of-bounds scatters, but that is an implementation detail,
+    not part of this contract; see :meth:`to_dense`).  Matrices with
+    trailing all-zero rows are valid: ``row_ptr`` simply repeats its final
+    value and the pad slots stay inert.
+    """
 
     value: jax.Array    # (nnz_max,) float
     col_id: jax.Array   # (nnz_max,) int32, -1 on padding
@@ -94,12 +104,20 @@ class CSR:
         )
 
     def to_dense(self) -> jax.Array:
-        """Device-side scatter back to dense (works under jit)."""
+        """Device-side scatter back to dense (works under jit).
+
+        Pad handling is explicit, per the class pad contract: a pad slot's
+        row index resolves to ``n_rows`` (``searchsorted`` past the last
+        live slot — e.g. every pad when the matrix has trailing all-zero
+        rows), so it is clamped in range and its *contribution* is zeroed
+        via the ``col_id >= 0`` mask.  Correctness therefore never rests
+        on XLA's drop-out-of-bounds scatter mode.
+        """
         n_rows, n_cols = self.shape
         # row id for every slot in the padded value array
         slot = jnp.arange(self.nnz_max, dtype=jnp.int32)
         row_of_slot = jnp.searchsorted(self.row_ptr[1:], slot, side="right")
-        row_of_slot = row_of_slot.astype(jnp.int32)
+        row_of_slot = jnp.minimum(row_of_slot, n_rows - 1).astype(jnp.int32)
         valid = self.col_id >= 0
         col = jnp.where(valid, self.col_id, 0)
         out = jnp.zeros((n_rows, n_cols), dtype=self.value.dtype)
@@ -112,6 +130,26 @@ class CSR:
         return jnp.searchsorted(self.row_ptr[1:], slot, side="right").astype(
             jnp.int32
         )
+
+    def check_pad_contract(self) -> "CSR":
+        """Host-side validation of the pad contract (class docstring).
+
+        For containers built *outside* the blessed constructors — loaded
+        checkpoints, hand-assembled tests, format converters — this is
+        the real runtime check that pad slots are ``(col_id=-1, value=0)``
+        and ``row_ptr`` is monotone within capacity.  Raises ``ValueError``
+        (not ``assert`` — it must survive ``python -O``).  Concrete
+        arrays only (it reads values); returns ``self`` for chaining.
+        """
+        rptr = np.asarray(self.row_ptr)
+        nnz = int(rptr[-1])
+        if not ((np.diff(rptr) >= 0).all() and nnz <= self.nnz_max):
+            raise ValueError("row_ptr not monotone within capacity")
+        if not (np.asarray(self.col_id)[nnz:] == -1).all():
+            raise ValueError("pad col_id must be -1")
+        if np.asarray(self.value)[nnz:].any():
+            raise ValueError("pad values must be 0")
+        return self
 
 
 @jax.tree_util.register_pytree_node_class
@@ -205,6 +243,126 @@ class BlockCSR:
         """Host-side block density (fraction of non-zero blocks)."""
         nnzb = int(np.asarray(self.row_ptr)[-1])
         return nnzb / (self.n_block_rows * self.n_block_cols)
+
+
+# --------------------------------------------------------------------------
+# transposes (sorted CSR in, sorted CSR out — never densified)
+# --------------------------------------------------------------------------
+
+def _transpose_perm(rows: np.ndarray, cols: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Permutation taking row-major (row, col) walk order to the transpose.
+
+    ``perm[j]`` is the source slot of the j-th live entry of A^T.  Sorting
+    by ``(col, row)`` with a stable key *is* the accumulate-side semantics
+    of :func:`merge_by_column` lifted to the whole matrix: entries are
+    regrouped under their column (the new row) and, because the source walk
+    is row-major, each group comes out sorted by source row — the new
+    column — so the result honours the sorted-column invariant for free.
+    Returns ``(perm, t_rows, t_cols)`` over live entries.
+    """
+    perm = np.lexsort((rows, cols))
+    return perm, cols[perm], rows[perm]
+
+
+def csr_transpose(a: CSR, *, nnz_max: int | None = None) -> CSR:
+    """A^T as sorted padded CSR, without ever densifying.
+
+    Metadata (``row_ptr``/``col_id``) is walked on the host — like plan
+    construction, this is a *pattern* operation, so it raises loudly on
+    traced metadata (under ``jax.jit`` transpose the pattern ahead of time
+    and close over it).  The **values** move through a traced gather, so
+    the payload may be a tracer: ``csr_transpose`` composes with jit the
+    same way the numeric SpGEMM phase does.
+
+    The output upholds the full pad contract (``col_id = -1`` / zero
+    values past ``nnz``) at capacity ``nnz_max`` (default: the input's,
+    so round-tripping preserves shapes/jit-cache keys).
+    """
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnz = int(rptr[-1])
+    cap = a.nnz_max if nnz_max is None else int(nnz_max)
+    if cap < nnz:
+        raise ValueError(f"nnz_max={cap} < nnz={nnz}")
+    n_rows, n_cols = a.shape
+    cols = np.asarray(a.col_id)[:nnz].astype(np.int64)
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(rptr))
+    perm, t_rows, t_cols = _transpose_perm(rows, cols)
+
+    t_rptr = np.zeros(n_cols + 1, np.int32)
+    np.cumsum(np.bincount(t_rows, minlength=n_cols), out=t_rptr[1:])
+    col_id = np.full(cap, -1, np.int32)
+    col_id[:nnz] = t_cols
+    value = jnp.zeros((cap,), a.value.dtype)
+    if nnz:
+        value = value.at[:nnz].set(a.value[jnp.asarray(perm)])
+    return CSR(value=value, col_id=jnp.asarray(col_id),
+               row_ptr=jnp.asarray(t_rptr), shape=(n_cols, n_rows))
+
+
+def bsr_transpose(a: BlockCSR,
+                  *, n_blocks_max: int | None = None) -> BlockCSR:
+    """A^T as BlockCSR: transposed block pattern, transposed block payloads.
+
+    The TPU-granularity lift of :func:`csr_transpose` — block metadata is
+    re-sorted on the host (same ``(col, row)`` stable key, same sorted
+    invariant), each ``(bm, bk)`` payload is swapped to ``(bk, bm)``
+    through a traced gather, and pad slots are re-zeroed explicitly so the
+    naive (zero-payload-reliant) kernel walk stays safe even when the
+    source payload is a tracer.  Use :func:`bsr_transpose_meta` when only
+    the pattern is needed (e.g. to build the transpose-side plan once and
+    gather payloads later, which is what the SpMM VJP does).
+    """
+    cap = a.n_blocks_max if n_blocks_max is None else int(n_blocks_max)
+    perm, block_row, block_col, row_ptr, nnzb = bsr_transpose_meta(
+        a, pad_to=cap)
+    bm, bk = a.block_shape
+    blocks = jnp.zeros((cap, bk, bm), a.blocks.dtype)
+    if nnzb:
+        gathered = jnp.swapaxes(a.blocks[jnp.asarray(perm[:nnzb])], 1, 2)
+        blocks = blocks.at[:nnzb].set(gathered)
+    return BlockCSR(
+        blocks=blocks,
+        block_col=jnp.asarray(block_col),
+        block_row=jnp.asarray(block_row),
+        row_ptr=jnp.asarray(row_ptr),
+        shape=(a.shape[1], a.shape[0]),
+        block_shape=(bk, bm),
+    )
+
+
+def bsr_transpose_meta(a: BlockCSR, *, pad_to: int | None = None):
+    """Host-side transpose of a BlockCSR *pattern* only.
+
+    Returns ``(perm, block_row, block_col, row_ptr, nnzb)`` where ``perm``
+    maps the j-th live block of A^T to its source slot in ``a.blocks`` —
+    the gather the payload side of :func:`bsr_transpose` (and the SpMM
+    VJP) applies under trace.  With ``pad_to``, ``block_row``/``block_col``
+    come back padded to that capacity under the container pad contract
+    (col ``-1``; row pointing at the last real block-row of A^T, keeping
+    first/last-visit detection in the kernels a pure metadata
+    comparison) — the ONE place that convention is encoded, shared by
+    :func:`bsr_transpose` and the transpose-side planner.  Raises on
+    traced metadata like every other pattern walk.
+    """
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnzb = int(rptr[-1])
+    cols = np.asarray(a.block_col)[:nnzb].astype(np.int64)
+    rows = np.repeat(np.arange(a.n_block_rows, dtype=np.int64),
+                     np.diff(rptr))
+    perm, t_rows, t_cols = _transpose_perm(rows, cols)
+    t_rptr = np.zeros(a.n_block_cols + 1, np.int32)
+    np.cumsum(np.bincount(t_rows, minlength=a.n_block_cols), out=t_rptr[1:])
+    t_rows = t_rows.astype(np.int32)
+    t_cols = t_cols.astype(np.int32)
+    if pad_to is not None:
+        if pad_to < nnzb:
+            raise ValueError(f"n_blocks_max={pad_to} < nnz blocks={nnzb}")
+        pad = lambda arr, fill: np.concatenate(
+            [arr, np.full(pad_to - nnzb, fill, np.int32)])
+        t_rows = pad(t_rows, max(a.n_block_cols - 1, 0))
+        t_cols = pad(t_cols, -1)
+    return perm.astype(np.int32), t_rows, t_cols, t_rptr, nnzb
 
 
 # --------------------------------------------------------------------------

@@ -10,9 +10,10 @@ from repro.kernels.ops import (
     moe_expert_gemm,
 )
 from repro.kernels.schedule import (ExecutionPlan, SpgemmPlan, SpmmPlan,
-                                    bsr_stats, plan_spgemm, plan_spmm)
+                                    SpmmTrainPlan, bsr_stats, plan_spgemm,
+                                    plan_spmm, plan_spmm_vjp)
 
 __all__ = ["maple_spmm", "maple_spgemm", "maple_spmspm", "moe_expert_gemm",
            "csr_to_ell", "local_block_attention", "ExecutionPlan",
-           "SpmmPlan", "SpgemmPlan", "bsr_stats", "plan_spmm",
-           "plan_spgemm"]
+           "SpmmPlan", "SpgemmPlan", "SpmmTrainPlan", "bsr_stats",
+           "plan_spmm", "plan_spgemm", "plan_spmm_vjp"]

@@ -24,14 +24,14 @@ Padding protocol (see ``core.csr.BlockCSR``): padded slots carry
 last real block-row, so they are harmless accumulations into a tile that is
 flushed anyway.
 
-Three grid layouts live here (the wrappers in ops.py pick one):
+Two grid layouts live here (the wrappers in ops.py pick one; the seed's
+unbatched ``(N/bn, n_blocks)`` kernel was retired when the wrapper
+normalized every RHS to a batch — a 2D call is the G = 1 case below):
 
-* :func:`maple_spmm_pallas` — the seed ``(N/bn, n_blocks)`` grid: one
-  unsplit block-row after the next (row-atomic; kept as the ``naive``
-  schedule and the jit-friendly path);
-* :func:`maple_spmm_batched_pallas` — the same walk lifted to a **3D grid**
+* :func:`maple_spmm_batched_pallas` — the seed walk lifted to a **3D grid**
   ``(G, N/bn, n_blocks)`` over a batch of dense right-hand sides sharing
-  one A structure (the inference shape: G sequences × one sparse weight);
+  one A structure (one unsplit block-row after the next — row-atomic;
+  kept as the ``naive`` schedule and the jit-friendly path);
 * :func:`maple_spmm_planned_pallas` — the load-balanced grid
   ``(G, n_lanes, N/bn, steps)`` driven by a ``kernels.schedule.SpmmPlan``:
   each lane executes its chunk list (scalar-prefetched gather order), owns
@@ -51,86 +51,6 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
-
-
-def _kernel(
-    # scalar prefetch
-    block_row,          # (n_blocks,) int32, sorted, pads -> last row
-    block_col,          # (n_blocks,) int32, -1 on pads
-    # VMEM operands
-    a_blk_ref,          # (1, bm, bk) current A block
-    b_panel_ref,        # (bk, bn) B row-panel selected by block_col
-    out_ref,            # (bm, bn) output tile (revisited within a row)
-    # scratch
-    psb_ref,            # (bm, bn) f32 partial-sum buffer
-    *,
-    n_blocks: int,
-):
-    s = pl.program_id(1)
-
-    is_first = jnp.logical_or(s == 0, block_row[s] != block_row[jnp.maximum(s - 1, 0)])
-    is_last = jnp.logical_or(
-        s == n_blocks - 1, block_row[s] != block_row[jnp.minimum(s + 1, n_blocks - 1)]
-    )
-
-    @pl.when(is_first)
-    def _zero():  # first visit of this output tile: clear the PSB
-        psb_ref[...] = jnp.zeros_like(psb_ref)
-
-    # MAC: one non-zero block × its B row-panel on the MXU.  Padded blocks
-    # have zero payload, so their contribution is a no-op.
-    a = a_blk_ref[0]
-    psb_ref[...] += jnp.dot(
-        a, b_panel_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(is_last)
-    def _flush():  # final sum for this output tile: single HBM write
-        out_ref[...] = psb_ref[...].astype(out_ref.dtype)
-
-
-def maple_spmm_pallas(
-    blocks: jax.Array,      # (n_blocks, bm, bk)
-    block_row: jax.Array,   # (n_blocks,) int32
-    block_col: jax.Array,   # (n_blocks,) int32
-    b_dense: jax.Array,     # (K, N)
-    *,
-    m: int,
-    bn: int = 128,
-    interpret: bool = True,
-) -> jax.Array:
-    """Raw pallas_call wrapper (no padding logic — see ops.py)."""
-    n_blocks, bm, bk = blocks.shape
-    k, n = b_dense.shape
-    if n % bn:
-        raise ValueError(f"N={n} not divisible by bn={bn}")
-    if m % bm or k % bk:
-        raise ValueError(f"({m},{k}) not divisible by block ({bm},{bk})")
-    grid = (n // bn, n_blocks)
-
-    # clamp pad col ids (-1) to 0: their payload is zero so any panel works
-    safe_col = jnp.maximum(block_col, 0)
-
-    kernel = functools.partial(_kernel, n_blocks=n_blocks)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bm, bk), lambda j, s, br, bc: (s, 0, 0)),
-                pl.BlockSpec((bk, bn), lambda j, s, br, bc: (bc[s], j)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda j, s, br, bc: (br[s], j)),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((m, n), b_dense.dtype),
-        interpret=interpret,
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
-    )(block_row, safe_col, blocks, b_dense)
-    return out
 
 
 # --------------------------------------------------------------------------

@@ -18,8 +18,6 @@ API:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,14 +25,20 @@ import numpy as np
 from repro.core.csr import CSR, BlockCSR, grow_nnz_max
 from repro.kernels.block_attn import (block_attention_pallas,
                                       local_window_kv_map)
+from repro.kernels.maple_sddmm import (maple_sddmm_bsr_pallas,
+                                       maple_sddmm_csr_pallas)
 from repro.kernels.maple_spgemm import maple_spgemm_pallas
 from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
-                                      maple_spmm_pallas,
                                       maple_spmm_planned_pallas)
 from repro.kernels.maple_spmspm import maple_spmspm_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
-from repro.kernels.schedule import (SpgemmPlan, SpmmPlan, plan_spgemm,
-                                    plan_spmm)
+from repro.kernels.schedule import (SpgemmPlan, SpmmPlan, SpmmTrainPlan,
+                                    plan_spgemm, plan_spmm, plan_spmm_vjp)
+
+
+def _float0(x):
+    """Symbolic-zero cotangent for integer (metadata) primals."""
+    return np.zeros(x.shape, jax.dtypes.float0)
 
 
 def _default_interpret() -> bool:
@@ -63,9 +67,10 @@ def _pad_cols(b: jax.Array, bn: int) -> tuple[jax.Array, int]:
 
 def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                schedule: str = "balanced", n_lanes: int = 8,
-               chunk: int | None = None, plan: SpmmPlan | None = None,
+               chunk: int | None = None,
+               plan: SpmmPlan | SpmmTrainPlan | None = None,
                interpret: bool | None = None) -> jax.Array:
-    """C = A_bsr @ B with the Maple block dataflow.
+    """C = A_bsr @ B with the Maple block dataflow.  Differentiable.
 
     ``b_dense`` is one ``(K, N)`` right-hand side or a batch ``(G, K, N)``
     of them sharing A's structure (the inference shape — one kernel launch,
@@ -85,9 +90,22 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
       jit; the planned schedules read the (host-static) pattern at call
       time, so under jit they require a prebuilt ``plan``.
 
-    Pass a prebuilt ``plan`` (from ``kernels.schedule.plan_spmm``) to
-    amortize planning across calls and to jit the planned path — serving
-    builds it once per weight and closes a jitted call over it.
+    Pass a prebuilt ``plan`` (``kernels.schedule.plan_spmm`` or, for
+    training, ``plan_spmm_vjp``) to amortize planning across calls and to
+    jit the planned path — serving builds it once per weight and closes a
+    jitted call over it.
+
+    **Autodiff** (``jax.custom_vjp``): ``dB = A^T @ dC`` runs the same
+    planned kernel on the transposed block pattern, and ``dA`` is the
+    pattern-sampled ``(dC @ B^T)|_{nnz(A)}`` block SDDMM
+    (``kernels.maple_sddmm``) — dense ``dA`` is never materialized and
+    metadata carries no gradient.  The kernel backward needs host
+    pattern metadata: it is armed whenever the metadata is concrete
+    (eager) or an :class:`~repro.kernels.schedule.SpmmTrainPlan` is
+    passed (the jit path — the transpose-side plan rides the forward
+    plan).  A traced naive call without a train plan falls back to a
+    jnp gather/scatter backward at block granularity (same contraction,
+    no kernel, O(nnz_blocks × bn) gather buffers).
 
     Empty block-rows never flush a PSB; their output tiles are explicitly
     zero-masked (naive path: from row_ptr; planned paths: from the plan's
@@ -106,15 +124,20 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
         raise ValueError(
             f"contraction mismatch: A is {a.shape}, B has K={b_dense.shape[-2]}")
     m = a.shape[0]
-    bm = a.block_shape[0]
     batched = b_dense.ndim == 3
     b3 = b_dense if batched else b_dense[None]
     b3, n_orig = _pad_cols(b3, bn)
 
+    train: SpmmTrainPlan | None = None
+    if isinstance(plan, SpmmTrainPlan):
+        train = plan
+        plan = train.fwd
+
     # planning walks host metadata; under jit (traced row_ptr) a planned
     # schedule needs a prebuilt plan — otherwise fall back to the naive
     # walk instead of crashing on the tracer.
-    if plan is None and isinstance(a.row_ptr, jax.core.Tracer):
+    traced_meta = _has_traced_metadata(a.row_ptr, a.block_row, a.block_col)
+    if plan is None and traced_meta:
         schedule = "naive"
     if plan is not None:
         if plan.n_block_rows != a.n_block_rows:
@@ -125,30 +148,52 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
             raise ValueError("plan indexes blocks beyond the operand's "
                              "capacity — was it built for this weight?")
 
-    if schedule == "naive":
-        if batched:
-            out = maple_spmm_batched_pallas(
-                a.blocks, a.block_row, a.block_col, b3,
-                m=m, bn=bn, interpret=interpret)
-        else:
-            out = maple_spmm_pallas(
-                a.blocks, a.block_row, a.block_col, b3[0],
-                m=m, bn=bn, interpret=interpret)[None]
-        # mask tiles of block-rows that own no non-zero block
-        row_len = a.row_ptr[1:] - a.row_ptr[:-1]            # (gm,)
-        mask = jnp.repeat(row_len > 0, bm)                  # (M,)
-        out = jnp.where(mask[None, :, None], out, 0)
+    # per-lane f32 partial buffers: (lanes, M, N) on the forward pass,
+    # (lanes, K, N) on the backward A^T pass — each budgeted on its own
+    # axis so forward-only serving keeps its lane parallelism
+    k = a.shape[1]
+    def _lanes_for(rows):
+        tile_bytes = 4 * rows * b3.shape[-1] * b3.shape[0]
+        return max(1, min(n_lanes, LANE_BUDGET_BYTES // max(tile_bytes, 1)))
+    if plan is None and schedule != "naive":
+        # callers that pass an explicit plan keep full control; auto
+        # planning respects the lane-buffer budget
+        plan = plan_spmm(a, n_lanes=_lanes_for(m), chunk=chunk,
+                         row_atomic=(schedule == "row_atomic"))
+
+    # kernel-path VJP: armed by a prebuilt SpmmTrainPlan, or — when the
+    # pattern is concrete (eager) — built LAZILY on the first backward
+    # pass, so forward-only calls never pay for the transpose-side plan.
+    # The eager thunk reuses the forward plan just built (no second LPT
+    # walk) and budgets the A^T lanes on K.
+    if train is not None:
+        train_thunk = lambda t=train: t
+    elif traced_meta:
+        train_thunk = None          # jnp fallback backward (naive only)
     else:
-        if plan is None:
-            # callers that pass an explicit plan keep full control; auto
-            # planning respects the lane-buffer budget
-            tile_bytes = 4 * m * b3.shape[-1] * b3.shape[0]   # f32 partials
-            n_lanes = max(1, min(n_lanes,
-                                 LANE_BUDGET_BYTES // max(tile_bytes, 1)))
-            plan = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
-                             row_atomic=(schedule == "row_atomic"))
+        memo = []
+
+        def train_thunk(a=a, fwd=plan, lanes=_lanes_for(k), chunk=chunk,
+                        ra=(schedule == "row_atomic")):
+            if not memo:
+                memo.append(plan_spmm_vjp(a, n_lanes=lanes, chunk=chunk,
+                                          row_atomic=ra, fwd=fwd))
+            return memo[0]
+
+    out = _spmm_call(a, b3, plan=plan, train_thunk=train_thunk, bn=bn,
+                     interpret=interpret)
+    out = out[..., :n_orig]
+    return out if batched else out[0]
+
+
+def _spmm_forward(blocks, block_row, block_col, row_ptr, b3, *,
+                  plan: SpmmPlan | None, m: int, bm: int, bn: int,
+                  interpret: bool) -> jax.Array:
+    """Primal SpMM: planned lane grid when a plan is given, else the naive
+    batched walk over (possibly traced) container metadata."""
+    if plan is not None:
         lanes = maple_spmm_planned_pallas(
-            a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
             jnp.asarray(plan.step_col), b3, m=m, bn=bn, interpret=interpret)
         # discard tiles no (lane, row) run ever flushed, then merge the
         # per-lane f32 partials — the cross-lane reduction of split rows —
@@ -156,10 +201,112 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
         # naive single-accumulator walk).
         mask = jnp.repeat(jnp.asarray(plan.written), bm, axis=1)  # (L, M)
         lanes = jnp.where(mask[None, :, :, None], lanes, 0)
-        out = lanes.sum(axis=1).astype(b3.dtype)
+        return lanes.sum(axis=1).astype(b3.dtype)
+    out = maple_spmm_batched_pallas(
+        blocks, block_row, block_col, b3, m=m, bn=bn, interpret=interpret)
+    # mask tiles of block-rows that own no non-zero block
+    row_len = row_ptr[1:] - row_ptr[:-1]                # (gm,)
+    mask = jnp.repeat(row_len > 0, bm)                  # (M,)
+    return jnp.where(mask[None, :, None], out, 0)
 
-    out = out[..., :n_orig]
-    return out if batched else out[0]
+
+def _spmm_bwd_kernel_path(blocks, b3, dc, train: SpmmTrainPlan, *,
+                          bn: int, interpret: bool):
+    """(dA.blocks, dB) through the Maple kernels — the paper-machinery
+    backward: dB = A^T @ dC on the cached transpose-side plan, dA via the
+    block SDDMM sampled at A's pattern."""
+    bm, bk = train.block_shape
+    k = train.shape[1]
+    cap = train.n_blocks_max
+    nnzb = int(train.t_perm.size)
+
+    # --- dB = A^T @ dC: transposed payload gather + the planned kernel.
+    at_blocks = jnp.zeros((cap, bk, bm), blocks.dtype)
+    if nnzb:
+        gathered = jnp.swapaxes(blocks[jnp.asarray(train.t_perm)], 1, 2)
+        at_blocks = at_blocks.at[:nnzb].set(gathered)
+    lanes = maple_spmm_planned_pallas(
+        at_blocks, jnp.asarray(train.bwd.order),
+        jnp.asarray(train.bwd.step_row), jnp.asarray(train.bwd.step_col),
+        dc, m=k, bn=bn, interpret=interpret)
+    mask = jnp.repeat(jnp.asarray(train.bwd.written), bk, axis=1)  # (L, K)
+    lanes = jnp.where(mask[None, :, :, None], lanes, 0)
+    db = lanes.sum(axis=1).astype(b3.dtype)
+
+    # --- dA = (dC @ B^T) sampled at nnz(A): the block SDDMM.
+    da = maple_sddmm_bsr_pallas(
+        dc, b3, jnp.asarray(train.block_row), jnp.asarray(train.block_col),
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    live = jnp.asarray(train.block_col >= 0)
+    da = jnp.where(live[:, None, None], da, 0).astype(blocks.dtype)
+    return da, db
+
+
+def _spmm_bwd_jnp(blocks, block_row, block_col, b3, dc):
+    """Traced-metadata fallback backward (naive schedule under jit with no
+    train plan): the same two contractions as the kernel path, expressed as
+    jnp gathers/scatter-adds over block metadata.  dA is still sampled at
+    the block pattern — never a dense (M, K)."""
+    nb, bm, bk = blocks.shape
+    g, m, n = dc.shape
+    k = b3.shape[1]
+    live = block_col >= 0
+    br = jnp.clip(block_row, 0, m // bm - 1)
+    bc = jnp.clip(block_col, 0, k // bk - 1)
+    dc_t = dc.reshape(g, m // bm, bm, n)
+    b_t = b3.reshape(g, k // bk, bk, n)
+    dc_g = jnp.take(dc_t, br, axis=1)                     # (G, nb, bm, N)
+    b_g = jnp.take(b_t, bc, axis=1)                       # (G, nb, bk, N)
+    da = jnp.einsum("gsmn,gskn->smk", dc_g.astype(jnp.float32),
+                    b_g.astype(jnp.float32))
+    da = jnp.where(live[:, None, None], da, 0).astype(blocks.dtype)
+    contrib = jnp.einsum("smk,gsmn->gskn", blocks.astype(jnp.float32),
+                         dc_g.astype(jnp.float32))
+    contrib = jnp.where(live[None, :, None, None], contrib, 0)
+    db_t = jnp.zeros((g, k // bk, bk, n), jnp.float32).at[:, bc].add(contrib)
+    return da, db_t.reshape(g, k, n).astype(b3.dtype)
+
+
+def _spmm_call(a: BlockCSR, b3, *, plan, train_thunk, bn, interpret):
+    """custom_vjp boundary of maple_spmm.
+
+    Inputs are the payload (``a.blocks``, ``b3``) plus the container
+    metadata (so the traced naive path needs no closed-over tracers —
+    custom_vjp forbids those); metadata is integer-typed and receives
+    symbolic-zero (float0) cotangents: **structure is not differentiated**.
+
+    ``train_thunk`` is the lazy transpose-side schedule: ``None`` means
+    the traced jnp fallback backward, otherwise it yields the
+    ``SpmmTrainPlan`` on the first backward trace (prebuilt plans return
+    immediately; eager calls plan here, so forward-only use stays free).
+    """
+    m = a.shape[0]
+    bm = a.block_shape[0]
+    gm = a.n_block_rows
+
+    def impl(blocks, block_row, block_col, row_ptr, b3):
+        return _spmm_forward(blocks, block_row, block_col, row_ptr, b3,
+                             plan=plan, m=m, bm=bm, bn=bn,
+                             interpret=interpret)
+
+    call = jax.custom_vjp(impl)
+
+    def fwd(blocks, block_row, block_col, row_ptr, b3):
+        return impl(blocks, block_row, block_col, row_ptr, b3), (
+            blocks, block_row, block_col, b3)
+
+    def bwd(res, dc):
+        blocks, block_row, block_col, b3 = res
+        if train_thunk is not None:
+            da, db = _spmm_bwd_kernel_path(blocks, b3, dc, train_thunk(),
+                                           bn=bn, interpret=interpret)
+        else:
+            da, db = _spmm_bwd_jnp(blocks, block_row, block_col, b3, dc)
+        rptr0 = np.zeros((gm + 1,), jax.dtypes.float0)
+        return da, _float0(block_row), _float0(block_col), rptr0, db
+
+    call.defvjp(fwd, bwd)
+    return call(a.blocks, a.block_row, a.block_col, a.row_ptr, b3)
 
 
 # --------------------------------------------------------------------------
@@ -270,42 +417,145 @@ def maple_spgemm(a: CSR, b: CSR, *, schedule: str = "balanced",
     if cap < nnz_c:
         raise ValueError(f"nnz_max={cap} < nnz(C)={nnz_c}")
 
-    if nnz_c == 0:
-        # nothing to compute (all-zero pattern, or a zero-dimension
-        # operand the kernel's >= 1-row panels could not even represent)
-        value = jnp.zeros((cap,), a.value.dtype)
-    else:
-        # numeric phase: traced value gathers over the plan's (static)
-        # slot maps — ELL-regularized operands, no host copies, no
-        # densification.
-        a_vals = jnp.where(jnp.asarray(plan.a_live),
-                           a.value[jnp.asarray(plan.a_gather)], 0)
-        b_ell = jnp.where(jnp.asarray(plan.b_live),
-                          b.value[jnp.asarray(plan.b_gather)], 0)
-        ell_out = maple_spgemm_pallas(
-            a_vals.reshape(-1, 1), b_ell, jnp.asarray(plan.scatter_pos),
-            jnp.asarray(plan.order), jnp.asarray(plan.step_row),
-            jnp.asarray(plan.step_col), m=m, lc=plan.lc,
-            interpret=interpret)[:m]                   # drop sacrificial row
-
-        # compact ELL rows into the padded-CSR value vector (pattern is
-        # host metadata from the symbolic phase; only the values gather is
-        # traced)
-        lens = np.diff(plan.out_row_ptr)
-        rows = np.zeros(cap, np.int32)
-        offs = np.zeros(cap, np.int32)
-        rows[:nnz_c] = np.repeat(np.arange(m, dtype=np.int32), lens)
-        offs[:nnz_c] = (np.arange(nnz_c, dtype=np.int64)
-                        - np.repeat(plan.out_row_ptr[:-1], lens)
-                        ).astype(np.int32)
-        live = np.arange(cap) < nnz_c
-        value = jnp.where(jnp.asarray(live),
-                          ell_out[jnp.asarray(rows), jnp.asarray(offs)], 0)
+    value = _spgemm_value_call(a.value, b.value, plan=plan, cap=cap,
+                               interpret=interpret)
     col_id = np.full(cap, -1, np.int32)
     col_id[:nnz_c] = plan.out_cols
     return CSR(value=value, col_id=jnp.asarray(col_id),
                row_ptr=jnp.asarray(plan.out_row_ptr.astype(np.int32)),
                shape=(m, n))
+
+
+def _spgemm_compaction_maps(plan: SpgemmPlan, cap: int):
+    """Host (row, offset) of each output value slot — the forward's
+    ELL→padded-CSR compaction map and the backward's scatter for dC."""
+    m = plan.shape_a[0]
+    nnz_c = plan.nnz_c
+    lens = np.diff(plan.out_row_ptr)
+    rows = np.zeros(cap, np.int32)
+    offs = np.zeros(cap, np.int32)
+    rows[:nnz_c] = np.repeat(np.arange(m, dtype=np.int32), lens)
+    offs[:nnz_c] = (np.arange(nnz_c, dtype=np.int64)
+                    - np.repeat(plan.out_row_ptr[:-1], lens)
+                    ).astype(np.int32)
+    return rows, offs
+
+
+def _spgemm_value_call(a_value, b_value, *, plan: SpgemmPlan, cap: int,
+                       interpret: bool):
+    """custom_vjp boundary of maple_spgemm: (A values, B values) → C values.
+
+    The pattern side (``col_id`` / ``row_ptr`` of all three matrices) is
+    host metadata on the plan and is **not** differentiated; only the
+    payload flows.  Backward stays inside the compressed machinery:
+
+    * ``dA`` — the plan-driven element SDDMM
+      (``kernels.maple_sddmm.maple_sddmm_csr_pallas``): the forward's
+      ``scatter_pos`` run in reverse gathers ``dC`` at exactly the
+      positions row i's partials landed, one dot with the B row panel per
+      live A slot;
+    * ``dB = (A^T @ dC)|_{nnz(B)}`` — a transposed-operand pass expressed
+      over the same plan metadata: per live A slot, its value scales the
+      gathered ``dC`` positions and scatter-adds into the ELL row of the B
+      row it consumed (a segment-sum over A's column fibers — A^T's rows —
+      with no transposed container materialized).
+
+    Neither side ever forms a dense (M, K) or (K, N).
+    """
+    m = plan.shape_a[0]
+    k = plan.shape_b[0]
+    nnz_c = plan.nnz_c
+    la, lb, lc = plan.la, plan.lb, plan.lc
+    n_slots = m * la
+    a_cap = a_value.shape[0]
+    b_cap = b_value.shape[0]
+
+    rows, offs = _spgemm_compaction_maps(plan, cap)
+
+    def impl(a_value, b_value):
+        if nnz_c == 0:
+            # nothing to compute (all-zero pattern, or a zero-dimension
+            # operand the kernel's >= 1-row panels could not represent)
+            return jnp.zeros((cap,), a_value.dtype)
+        # numeric phase: traced value gathers over the plan's (static)
+        # slot maps — ELL-regularized operands, no host copies, no
+        # densification.  (Device constants are materialized *inside* the
+        # vjp bodies: custom_vjp's fwd/bwd are retraced lazily, and arrays
+        # hoisted to the enclosing scope would be baked into a trace that
+        # may be dead by then — the grad-of-jit leak.)
+        a_vals = jnp.where(jnp.asarray(plan.a_live),
+                           a_value[jnp.asarray(plan.a_gather)], 0)
+        b_ell = jnp.where(jnp.asarray(plan.b_live),
+                          b_value[jnp.asarray(plan.b_gather)], 0)
+        ell_out = maple_spgemm_pallas(
+            a_vals.reshape(-1, 1), b_ell, jnp.asarray(plan.scatter_pos),
+            jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), m=m, lc=lc,
+            interpret=interpret)[:m]                   # drop sacrificial row
+        # compact ELL rows into the padded-CSR value vector (pattern is
+        # host metadata from the symbolic phase; only the values gather
+        # is traced)
+        live = np.arange(cap) < nnz_c
+        return jnp.where(jnp.asarray(live),
+                         ell_out[jnp.asarray(rows), jnp.asarray(offs)], 0)
+
+    call = jax.custom_vjp(impl)
+
+    def fwd(a_value, b_value):
+        return impl(a_value, b_value), (a_value, b_value)
+
+    def bwd(res, dvalue):
+        a_value, b_value = res
+        if nnz_c == 0:
+            return jnp.zeros_like(a_value), jnp.zeros_like(b_value)
+        # dC back to ELL row layout (+ sacrificial row m for pad steps)
+        dc_ell = jnp.zeros((m + 1, lc), jnp.float32)
+        dc_ell = dc_ell.at[jnp.asarray(rows[:nnz_c]),
+                           jnp.asarray(offs[:nnz_c])].set(
+            dvalue[:nnz_c].astype(jnp.float32))
+
+        # --- dA: plan-driven element SDDMM over the forward schedule.
+        b_ell = jnp.where(jnp.asarray(plan.b_live),
+                          b_value[jnp.asarray(plan.b_gather)],
+                          0).astype(jnp.float32)
+        ell_da = maple_sddmm_csr_pallas(
+            dc_ell, b_ell, jnp.asarray(plan.scatter_pos),
+            jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), n_slots=n_slots,
+            interpret=interpret)[:n_slots, 0]
+        live_idx = np.nonzero(plan.a_live)[0]
+        da = jnp.zeros((a_cap,), jnp.float32)
+        if live_idx.size:
+            da = da.at[jnp.asarray(plan.a_gather[live_idx])].set(
+                ell_da[jnp.asarray(live_idx)])
+
+        # --- dB: transposed-operand pass over plan metadata (A^T's rows
+        # are A's column fibers — a scatter-add by consumed B row).
+        slot_col = np.full(n_slots, -1, np.int32)
+        live_steps = plan.step_col >= 0
+        slot_col[plan.order[live_steps]] = plan.step_col[live_steps]
+        pos_live = plan.scatter_pos >= 0                   # (n_slots, lb)
+        safe_pos = np.maximum(plan.scatter_pos, 0)
+        row_of_slot = np.repeat(np.arange(m, dtype=np.int32), la)
+        dcg = dc_ell[jnp.asarray(row_of_slot)[:, None],
+                     jnp.asarray(safe_pos)]
+        dcg = jnp.where(jnp.asarray(pos_live), dcg, 0)     # (n_slots, lb)
+        a_ell = jnp.where(jnp.asarray(plan.a_live),
+                          a_value[jnp.asarray(plan.a_gather)],
+                          0).astype(jnp.float32)
+        contrib = a_ell[:, None] * dcg
+        contrib = jnp.where(jnp.asarray(slot_col >= 0)[:, None], contrib, 0)
+        db_ell = jnp.zeros((k, lb), jnp.float32)
+        db_ell = db_ell.at[jnp.asarray(np.maximum(slot_col, 0))].add(contrib)
+        rb, cb = np.nonzero(plan.b_live)
+        db = jnp.zeros((b_cap,), jnp.float32)
+        if rb.size:
+            db = db.at[jnp.asarray(plan.b_gather[rb, cb])].set(
+                db_ell[jnp.asarray(rb), jnp.asarray(cb)])
+        return da.astype(a_value.dtype), db.astype(b_value.dtype)
+
+    call.defvjp(fwd, bwd)
+    return call(a_value, b_value)
 
 
 def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:

@@ -57,7 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, TypeVar
 
 import numpy as np
 
-from repro.core.csr import (CSR, BlockCSR, ell_slots,
+from repro.core.csr import (CSR, BlockCSR, bsr_transpose_meta, ell_slots,
                             spgemm_row_upper_bounds)
 from repro.core.maple import (SpGEMMStats, analyze_spgemm,
                               baseline_pe_cycles, expand_partials,
@@ -275,6 +275,108 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
     return SpmmPlan(order=order, step_row=step_row, step_col=step_col,
                     written=written, chunk=chunk, n_block_rows=gm,
                     n_real_steps=n_real, stats=stats)
+
+
+# --------------------------------------------------------------------------
+# SpMM training plan: forward + transpose-side schedules for the VJP
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpmmTrainPlan:
+    """Forward plan plus everything the ``maple_spmm`` VJP needs, cached.
+
+    The backward of ``C = A @ B`` stays inside the row-wise-product
+    machinery: ``dB = A^T @ dC`` is the same planned kernel run on the
+    **transposed block pattern**, and ``dA`` is the pattern-sampled
+    product ``(dC @ B^T)|_{pattern(A)}`` (the block SDDMM in
+    ``kernels.maple_sddmm``).  Both schedules are pattern-only, so —
+    exactly like the forward plan — they are built **once per weight** on
+    the host and closed over by jitted train steps; under trace only the
+    payload gathers run.
+
+    * ``fwd`` / ``bwd`` — lane schedules for A and A^T (same knobs);
+    * ``t_perm`` — gather taking ``a.blocks`` slots to A^T live-slot
+      order (the payload side of ``core.csr.bsr_transpose``, applied to
+      the traced blocks at backward time);
+    * ``t_block_row`` / ``t_block_col`` / ``t_row_ptr`` — A^T metadata at
+      the source capacity, pad slots per the container contract;
+    * ``block_row`` / ``block_col`` — host copies of A's metadata that
+      drive the SDDMM grid (the container's own copies may be tracers
+      inside a train step, where params — metadata included — are traced);
+    * ``predicted_cycles`` — fwd + A^T passes priced with the same
+      ``core.maple`` model (the SDDMM pass visits exactly the forward's
+      block set — one block-MAC per live block per output tile — so its
+      event count is the forward entry restated; it is not double-counted
+      here).
+    """
+
+    fwd: SpmmPlan
+    bwd: SpmmPlan
+    t_perm: np.ndarray        # (nnzb,) int32 — A^T live slot -> A slot
+    t_block_row: np.ndarray   # (n_blocks_max,) int32
+    t_block_col: np.ndarray   # (n_blocks_max,) int32, -1 pads
+    t_row_ptr: np.ndarray     # (n_block_cols + 1,) int32
+    block_row: np.ndarray     # (n_blocks_max,) int32 — host copy of A meta
+    block_col: np.ndarray     # (n_blocks_max,) int32, -1 pads
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+    n_blocks_max: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.fwd.n_block_rows
+
+    def predicted_cycles(self) -> Dict[str, float]:
+        """Fwd+bwd cycle predictions (same keys as ``ExecutionPlan``),
+        plus the per-pass breakdown (``fwd_plan`` / ``at_plan``)."""
+        f = self.fwd.predicted_cycles()
+        b = self.bwd.predicted_cycles()
+        out = {k: f[k] + b[k] for k in f}
+        out["fwd_plan"] = f["plan"]
+        out["at_plan"] = b["plan"]
+        return out
+
+
+def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
+                  chunk: Optional[int] = None,
+                  row_atomic: bool = False,
+                  fwd: Optional[SpmmPlan] = None) -> SpmmTrainPlan:
+    """Build the forward plan and cache the transpose-side plan with it.
+
+    Host-side over metadata like :func:`plan_spmm`; raises loudly on
+    traced metadata.  ``ops.maple_spmm`` accepts the result wherever a
+    plain ``SpmmPlan`` fits — passing it is what arms the kernel-path VJP
+    (without it, eager calls re-plan per call and traced naive calls fall
+    back to a jnp backward).  Pass an already-built ``fwd`` plan for the
+    same operand to skip re-planning the forward (``n_lanes``/``chunk``/
+    ``row_atomic`` then only shape the transpose-side schedule).
+    """
+    if fwd is None:
+        fwd = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
+                        row_atomic=row_atomic)
+    cap = a.n_blocks_max
+    bm, bk = a.block_shape
+    # the pad convention for the transposed metadata lives in ONE place:
+    # core.csr.bsr_transpose_meta(pad_to=...) — shared with bsr_transpose
+    perm, t_block_row, t_block_col, t_rptr, nnzb = bsr_transpose_meta(
+        a, pad_to=cap)
+    perm = perm[:nnzb]
+    # metadata-only stand-in for A^T: plan construction never touches the
+    # payload, so a (cap, 1, 1) zero keeps it O(metadata)
+    at_pattern = BlockCSR(
+        blocks=np.zeros((cap, 1, 1), np.float32),
+        block_col=t_block_col, block_row=t_block_row,
+        row_ptr=t_rptr, shape=(a.shape[1], a.shape[0]),
+        block_shape=(bk, bm))
+    bwd = plan_spmm(at_pattern, n_lanes=n_lanes, chunk=chunk,
+                    row_atomic=row_atomic)
+    return SpmmTrainPlan(
+        fwd=fwd, bwd=bwd, t_perm=perm,
+        t_block_row=t_block_row, t_block_col=t_block_col, t_row_ptr=t_rptr,
+        block_row=np.asarray(a.block_row).astype(np.int32).copy(),
+        block_col=np.asarray(a.block_col).astype(np.int32).copy(),
+        shape=a.shape, block_shape=a.block_shape, n_blocks_max=cap,
+    )
 
 
 # --------------------------------------------------------------------------

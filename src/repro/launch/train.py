@@ -64,7 +64,10 @@ def main(argv=None):
         params, opt = restored["params"], restored["opt"]
         print(f"resumed from step {start}")
 
-    step_fn = jax.jit(make_train_step(cfg, ocfg, args.micro_batches))
+    # sparse-MLP configs: one host-side symbolic pass; the jitted step
+    # closes over the shared fwd+bwd plan (None for dense configs)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, args.micro_batches,
+                                      mlp_plan=lm.sparse_mlp_plan(params)))
     monitor = StragglerMonitor()
     host = f"host{jax.process_index()}"
 

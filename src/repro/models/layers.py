@@ -490,14 +490,33 @@ def encode_kv(p, cfg: AttnConfig, enc_out):
 # --------------------------------------------------------------------------
 
 def init_mlp(key, d_model: int, d_ff: int, activation: str,
-             dtype=jnp.float32):
+             dtype=jnp.float32, *, sparse_down: bool = False,
+             sparse_block=(64, 64), sparse_density: float = 0.25,
+             mask_key=None):
+    """MLP params.  ``sparse_down=True`` replaces the down projection with
+    a block-sparse :class:`~repro.core.csr.BlockCSR` weight (the Maple
+    kernel as a trainable layer).  Pass the same ``mask_key`` for every
+    layer of a scanned stack so all layers share one block pattern — the
+    stacked pytree then has congruent leaf shapes and a single
+    ``SpmmTrainPlan`` drives every layer's forward *and* backward.
+    """
     ks = jax.random.split(key, 3)
     if activation in ("silu", "gelu_glu"):  # gated (SwiGLU / GeGLU)
-        return {
+        p = {
             "w_gate": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
             "w_up": dense_init(ks[1], (d_model, d_ff), d_model, dtype),
-            "w_down": dense_init(ks[2], (d_ff, d_model), d_ff, dtype),
         }
+        if sparse_down:
+            p["w_down"] = init_sparse_linear(
+                ks[2], d_ff, d_model, block_shape=sparse_block,
+                block_density=sparse_density, dtype=dtype,
+                mask_key=mask_key)
+        else:
+            p["w_down"] = dense_init(ks[2], (d_ff, d_model), d_ff, dtype)
+        return p
+    if sparse_down:
+        raise ValueError("sparse_down supports the gated (silu/gelu_glu) "
+                         f"MLP only, got activation={activation!r}")
     return {  # plain 2-layer (whisper-style GELU)
         "w_in": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
         "b_in": jnp.zeros((d_ff,), dtype),
@@ -506,12 +525,20 @@ def init_mlp(key, d_model: int, d_ff: int, activation: str,
     }
 
 
-def mlp(p, x, activation: str):
+def mlp(p, x, activation: str, *, sparse_plan=None):
+    """MLP apply.  A ``BlockCSR`` down projection routes through
+    ``sparse_linear`` (one batched Maple kernel launch, differentiable);
+    ``sparse_plan`` is the prebuilt ``SpmmTrainPlan`` jitted train steps
+    close over (without it the wrapper re-plans eagerly, or — with traced
+    metadata, e.g. the decode path — falls back to the naive schedule).
+    """
     if activation in ("silu", "gelu_glu"):
         act = jax.nn.silu if activation == "silu" else jax.nn.gelu
         h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
         h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
         h = shard(h, ("batch", "seq", "mlp"))
+        if isinstance(p["w_down"], BlockCSR):
+            return sparse_linear(p["w_down"], h, plan=sparse_plan)
         return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
     h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"])
     h = shard(h, ("batch", "seq", "mlp"))
@@ -524,19 +551,28 @@ def mlp(p, x, activation: str):
 
 def init_sparse_linear(key, d_in: int, d_out: int, *,
                        block_shape=(64, 64), block_density: float = 0.25,
-                       dtype=jnp.float32) -> BlockCSR:
+                       dtype=jnp.float32, mask_key=None) -> BlockCSR:
     """Block-sparse ``(d_out, d_in)`` projection weight as BlockCSR.
 
     Sparsity is sampled at block granularity — the unit the Maple kernels
     skip — and every block-row keeps at least one block so no output
     channel goes structurally dead.  BlockCSR is a pytree, so the weight
-    drops into a params dict like any dense array.
+    drops into a params dict like any dense array, and ``maple_spmm``'s
+    custom VJP makes it *trainable*: the payload gets gradients (sampled
+    at the fixed pattern), the metadata gets float0.
+
+    ``mask_key`` decouples the pattern from the value init: layers that
+    share a ``mask_key`` share a block pattern (and therefore one
+    ``SpmmTrainPlan``) while drawing independent values — what a scanned
+    stack of sparse layers needs.
     """
     bm, bk = block_shape
     if d_out % bm or d_in % bk:
         raise ValueError(f"({d_out},{d_in}) not divisible by {block_shape}")
     gm, gk = d_out // bm, d_in // bk
     k_mask, k_val = jax.random.split(key)
+    if mask_key is not None:
+        k_mask = mask_key
     mask = jax.random.uniform(k_mask, (gm, gk)) < block_density
     fallback = jnp.zeros((gm, gk), bool).at[
         jnp.arange(gm), jnp.arange(gm) % gk].set(True)
@@ -558,8 +594,12 @@ def sparse_linear(w: BlockCSR, x, *, plan=None, bn: int = 128,
     forced exactly that loop).  Ragged token counts are fine; the wrapper
     pads to the ``bn`` tile and slices back.
 
-    Pass ``plan`` (from ``repro.kernels.plan_spmm``) to amortize schedule
-    construction across calls — layers build it once per weight.
+    Pass ``plan`` (from ``repro.kernels.plan_spmm``, or ``plan_spmm_vjp``
+    when gradients must flow under jit) to amortize schedule construction
+    across calls — layers build it once per weight.  The call is
+    differentiable w.r.t. both ``w``'s payload and ``x`` through
+    ``maple_spmm``'s custom VJP (A^T pass + block SDDMM; see
+    ``kernels/README.md``).
     """
     from repro.kernels import maple_spmm  # local: keep layers importable
     # without pulling pallas in for dense-only models

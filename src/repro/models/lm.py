@@ -105,8 +105,17 @@ def _init_block(key, cfg: ModelConfig, kind: str, *, cross: bool,
         if cfg.ffn_kind == "moe":
             p["moe"] = M.init_moe(ks[5], _moe_cfg(cfg), dtype)
         else:
+            # sparse_mlp: the block mask comes from the *config* seed, not
+            # the per-layer key, so every layer of the scanned stack shares
+            # one pattern (congruent stacked leaves, one SpmmTrainPlan)
+            mask_key = (jax.random.PRNGKey(cfg.sparse_mask_seed)
+                        if cfg.sparse_mlp else None)
             p["mlp"] = L.init_mlp(ks[5], cfg.d_model, cfg.d_ff,
-                                  cfg.activation, dtype)
+                                  cfg.activation, dtype,
+                                  sparse_down=cfg.sparse_mlp,
+                                  sparse_block=cfg.sparse_block,
+                                  sparse_density=cfg.sparse_density,
+                                  mask_key=mask_key)
     return p
 
 
@@ -115,7 +124,7 @@ def _init_block(key, cfg: ModelConfig, kind: str, *, cross: bool,
 # --------------------------------------------------------------------------
 
 def _apply_block(p, cfg: ModelConfig, kind: str, x, positions,
-                 enc_kv=None):
+                 enc_kv=None, mlp_plan=None):
     h = L.apply_norm(x, p["norm1"], cfg.norm)
     if kind in ("attn", "local_attn", "enc_attn"):
         acfg = _attn_cfg(cfg, kind)
@@ -139,7 +148,8 @@ def _apply_block(p, cfg: ModelConfig, kind: str, x, positions,
 
     if "mlp" in p:
         h = L.apply_norm(x, p["norm2"], cfg.norm)
-        x = x + _name_tp(L.mlp(p["mlp"], h, cfg.activation))
+        x = x + _name_tp(L.mlp(p["mlp"], h, cfg.activation,
+                               sparse_plan=mlp_plan))
     elif "moe" in p:
         h = L.apply_norm(x, p["norm2"], cfg.norm)
         x = x + _name_tp(M.moe_layer(p["moe"], _moe_cfg(cfg), h))
@@ -198,15 +208,40 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
     return params
 
 
+def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None):
+    """Build the shared ``SpmmTrainPlan`` for a sparse-MLP model.
+
+    Every sparse layer shares the mask (``cfg.sparse_mask_seed``), so one
+    plan — built from layer 0 of the first stacked BlockCSR found in the
+    param tree — schedules forward *and* backward for all of them.  Host
+    metadata walk: call it once on concrete params (outside jit) and close
+    the jitted train step over the result.  Returns ``None`` when the tree
+    holds no sparse weight (dense configs pass through).
+    """
+    from repro.core.csr import BlockCSR
+    from repro.kernels.schedule import plan_spmm_vjp
+
+    is_bcsr = lambda v: isinstance(v, BlockCSR)
+    weights = [w for w in jax.tree_util.tree_leaves(params, is_leaf=is_bcsr)
+               if is_bcsr(w)]
+    if not weights:
+        return None
+    w = weights[0]
+    if w.blocks.ndim == 4:          # stacked over layers: take layer 0
+        w = jax.tree_util.tree_map(lambda a: a[0], w)
+    return plan_spmm_vjp(w, n_lanes=n_lanes, chunk=chunk)
+
+
 # --------------------------------------------------------------------------
 # forward (training / full-sequence)
 # --------------------------------------------------------------------------
 
-def _scan_stack(stack_params, kinds, cfg, x, positions, enc_kv, remat: bool):
+def _scan_stack(stack_params, kinds, cfg, x, positions, enc_kv, remat: bool,
+                mlp_plan=None):
     def body(x, layer_p):
         for i, kind in enumerate(kinds):
             x = _apply_block(layer_p[f"b{i}"], cfg, kind, x, positions,
-                             enc_kv)
+                             enc_kv, mlp_plan)
         return x, None
 
     if remat:
@@ -216,14 +251,14 @@ def _scan_stack(stack_params, kinds, cfg, x, positions, enc_kv, remat: bool):
     return x
 
 
-def _encode(params, cfg: ModelConfig, enc_frames, remat):
+def _encode(params, cfg: ModelConfig, enc_frames, remat, mlp_plan=None):
     """Whisper-style encoder over precomputed (stub) frame embeddings."""
     x = enc_frames + sinusoidal_positions(
         enc_frames.shape[1], cfg.d_model).astype(enc_frames.dtype)
     positions = jnp.broadcast_to(
         jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
     x = _scan_stack(params["encoder"]["groups"], ("enc_attn",), cfg, x,
-                    positions, None, remat)
+                    positions, None, remat, mlp_plan)
     return L.apply_norm(x, params["encoder"]["final_norm"], cfg.norm)
 
 
@@ -240,14 +275,21 @@ def _embed_inputs(params, cfg: ModelConfig, batch):
     return shard(x, ("batch", "seq", None)), positions
 
 
-def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
-    """Full-sequence forward → logits (B, S, vocab_padded)."""
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = True,
+            mlp_plan=None):
+    """Full-sequence forward → logits (B, S, vocab_padded).
+
+    ``mlp_plan`` — prebuilt ``SpmmTrainPlan`` for the shared sparse-MLP
+    pattern (``sparse_mlp_plan``); a host object the scan bodies close
+    over, required for the planned kernel path under jit (without it the
+    sparse layers fall back to the naive traced schedule).
+    """
     unit, n_groups, tail = cfg.layer_plan()
     x, positions = _embed_inputs(params, cfg, batch)
 
     enc_kv = None
     if cfg.n_enc_layers > 0:
-        enc_out = _encode(params, cfg, batch["enc_frames"], remat)
+        enc_out = _encode(params, cfg, batch["enc_frames"], remat, mlp_plan)
         # cross K/V are shared across decoder layers per-layer; each block
         # projects its own K/V from enc_out inside the scan (stacked wk/wv),
         # so pass enc_out and let blocks project.  To keep the scan carry
@@ -265,7 +307,7 @@ def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
             for i, kind in enumerate(kinds):
                 bp = layer_p[f"b{i}"]
                 kv = block_enc_kv(bp) if "cross" in bp else None
-                x = _apply_block(bp, cfg, kind, x, positions, kv)
+                x = _apply_block(bp, cfg, kind, x, positions, kv, mlp_plan)
             return x, None
 
         n_groups_here = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
@@ -308,9 +350,11 @@ def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
     return shard(logits, ("batch", "seq", "vocab"))
 
 
-def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True):
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True,
+            mlp_plan=None):
     """Next-token cross-entropy (+z-loss), masked on labels < 0."""
-    logits = forward(params, cfg, batch, remat=remat).astype(jnp.float32)
+    logits = forward(params, cfg, batch, remat=remat,
+                     mlp_plan=mlp_plan).astype(jnp.float32)
     labels = batch["labels"]
     if cfg.n_patches > 0:  # vision prefix produces no loss positions
         pad = jnp.full((labels.shape[0], cfg.n_patches), -1, labels.dtype)

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.csr import BlockCSR
-from repro.kernels.schedule import SpmmPlan, plan_spmm
+from repro.kernels.schedule import (SpmmPlan, SpmmTrainPlan, plan_spmm,
+                                    plan_spmm_vjp)
 from repro.models import lm
 from repro.models.layers import sparse_linear
 
@@ -32,33 +33,62 @@ class SparseLogitHead:
     the batched planned grid the whole batch is one ``pallas_call``, and
     the load-balanced execution plan is built **once** here from the
     weight's (static) sparsity pattern and reused on every step.
+
+    ``build(trainable=True)`` caches the transpose-side plan alongside
+    the forward one (``plan_spmm_vjp``), so the same head object serves
+    *and* backpropagates under jit — e.g. logit-distillation fine-tuning
+    against the serving head without replanning.
     """
 
     weight: BlockCSR         # (vocab, d_model) block-sparse
-    plan: SpmmPlan
+    plan: SpmmPlan | SpmmTrainPlan
 
     @classmethod
     def build(cls, weight: BlockCSR, *, n_lanes: int = 8,
-              chunk: int | None = None) -> "SparseLogitHead":
+              chunk: int | None = None,
+              trainable: bool = False) -> "SparseLogitHead":
+        planner = plan_spmm_vjp if trainable else plan_spmm
         return cls(weight=weight,
-                   plan=plan_spmm(weight, n_lanes=n_lanes, chunk=chunk))
+                   plan=planner(weight, n_lanes=n_lanes, chunk=chunk))
+
+    @property
+    def _fwd_plan(self) -> SpmmPlan:
+        return (self.plan.fwd if isinstance(self.plan, SpmmTrainPlan)
+                else self.plan)
 
     @property
     def predicted_cycles(self):
-        """Planner/analytical cycle estimates (see SpmmPlan)."""
+        """Planner/analytical cycle estimates (see SpmmPlan; train plans
+        add the A^T-pass breakdown)."""
         return self.plan.predicted_cycles()
+
+    def _reduced_plan(self, n_lanes: int):
+        """Same planner, fewer lanes — memoized per lane count so the
+        over-budget path neither re-plans per step nor drops the train
+        plan (which would silently demote trainable heads to the naive
+        schedule + jnp backward under jit)."""
+        cache = self.__dict__.setdefault("_reduced_plans", {})
+        if n_lanes not in cache:
+            planner = (plan_spmm_vjp if isinstance(self.plan, SpmmTrainPlan)
+                       else plan_spmm)
+            cache[n_lanes] = planner(self.weight, n_lanes=n_lanes,
+                                     chunk=self._fwd_plan.chunk or None)
+        return cache[n_lanes]
 
     def __call__(self, hidden: jax.Array) -> jax.Array:
         """hidden: (B, S, D) → logits (B, S, V) in one batched launch."""
         from repro.kernels.ops import LANE_BUDGET_BYTES
         # a prebuilt plan pins n_lanes; when vocab × tokens is wide enough
-        # that the per-lane partial buffer would blow the budget, defer to
-        # the wrapper's auto-planning, which trims the lane count instead
+        # that the per-lane partial buffer would blow the budget, swap in
+        # a reduced-lane plan (same planner, so trainable heads keep their
+        # transpose-side schedule) rather than dropping the plan
         tokens = int(np.prod(hidden.shape[:-1])) if hidden.ndim > 1 else 1
-        buf = 4 * self.plan.n_lanes * self.weight.shape[0] * tokens
-        if buf > LANE_BUDGET_BYTES:
-            return sparse_linear(self.weight, hidden)
-        return sparse_linear(self.weight, hidden, plan=self.plan)
+        tile = 4 * self.weight.shape[0] * tokens
+        lanes_fit = max(1, LANE_BUDGET_BYTES // max(tile, 1))
+        plan = self.plan
+        if lanes_fit < self._fwd_plan.n_lanes:
+            plan = self._reduced_plan(int(lanes_fit))
+        return sparse_linear(self.weight, hidden, plan=plan)
 
 
 @dataclasses.dataclass(frozen=True)

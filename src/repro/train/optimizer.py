@@ -109,6 +109,16 @@ def apply_updates(cfg: OptimizerConfig, params, grads, state: OptState):
     new_p, new_m, new_v, new_e = [], [], [], []
     for (path, p), g, m, v, err in zip(flat_p, flat_g, flat_m, flat_v,
                                        flat_e):
+        if not jnp.issubdtype(p.dtype, jnp.inexact):
+            # sparse-container metadata (col ids / row pointers) rides the
+            # param tree but is structure, not weights: the kernels return
+            # float0 cotangents for it and the train step passes zero
+            # placeholders — thread it through untouched, moments and all.
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+            new_e.append(err)
+            continue
         path_str = "/".join(str(getattr(k, "key", k)) for k in path)
         g32 = g.astype(jnp.float32)
         if cfg.compress_grads:

@@ -6,11 +6,20 @@ each microbatch's gradient psum (inserted by GSPMD for the data axis)
 overlaps with the next microbatch's compute inside the scan, and only the
 *accumulated* gradient flows into the optimizer — one reduce per step per
 tensor, amortized across microbatches.
+
+Sparse layers ride the param tree as BlockCSR pytrees, which mixes
+integer *metadata* leaves (col ids, row pointers — the sparsity pattern)
+in with the float payloads.  ``jax.grad`` rejects integer inputs, and the
+pattern is not trained anyway, so the step differentiates through a
+**trainable partition**: float leaves are split out, grads are taken
+w.r.t. that list alone, and the metadata is threaded through unchanged
+(its grad slots are zero placeholders so the grads tree stays congruent
+with params for accumulation/optimizer plumbing; the optimizer passes
+non-inexact leaves through untouched).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -31,14 +40,57 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
     return jax.tree_util.tree_map(split, batch)
 
 
+def split_trainable(params) -> Tuple[list, Any]:
+    """Partition a param tree into (trainable float leaves, static rest).
+
+    Returns ``(diff, aux)`` where ``diff`` is the list of inexact-dtype
+    leaves (a valid pytree for ``jax.grad``) and ``aux`` re-merges via
+    :func:`merge_trainable`.  Integer leaves — sparse-container metadata —
+    are carried in ``aux``; they may be tracers (inside jit) or concrete.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    is_diff = tuple(jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact)
+                    for l in leaves)
+    diff = [l for l, d in zip(leaves, is_diff) if d]
+    rest = [None if d else l for l, d in zip(leaves, is_diff)]
+    return diff, (treedef, rest, is_diff)
+
+
+def merge_trainable(diff, aux):
+    """Inverse of :func:`split_trainable`."""
+    treedef, rest, is_diff = aux
+    it = iter(diff)
+    leaves = [next(it) if d else r for d, r in zip(is_diff, rest)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
-                    micro_batches: int | None = None):
-    """Build the jit-able train_step(params, opt_state, batch)."""
+                    micro_batches: int | None = None, mlp_plan=None):
+    """Build the jit-able train_step(params, opt_state, batch).
+
+    ``mlp_plan`` — the shared ``SpmmTrainPlan`` for sparse-MLP configs
+    (``lm.sparse_mlp_plan(params)``, built once on concrete params); the
+    jitted step closes over it so the planned kernels and their
+    kernel-path VJPs run under trace.
+    """
     n_micro = micro_batches or cfg.train_microbatches
 
     def grad_one(params, mb):
-        (loss, metrics), grads = jax.value_and_grad(
-            lm.loss_fn, has_aux=True)(params, cfg, mb, remat=cfg.remat)
+        diff, aux = split_trainable(params)
+
+        def loss_of(diff):
+            p = merge_trainable(diff, aux)
+            return lm.loss_fn(p, cfg, mb, remat=cfg.remat,
+                              mlp_plan=mlp_plan)
+
+        (loss, metrics), grads_diff = jax.value_and_grad(
+            loss_of, has_aux=True)(diff)
+        # re-expand to the params structure; metadata slots carry zeros so
+        # accumulation and the optimizer see a congruent tree
+        _, rest, is_diff = aux
+        zeros = [None if d else jnp.zeros_like(r)
+                 for d, r in zip(is_diff, rest)]
+        grads = merge_trainable(grads_diff, (aux[0], zeros, is_diff))
         return loss, metrics, grads
 
     def train_step(params, opt_state: OptState, batch):

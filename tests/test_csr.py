@@ -10,7 +10,10 @@ except ImportError:  # optional dev dep; see tests/README.md
 pytestmark = pytest.mark.tier1
 
 
-from repro.core.csr import CSR, BlockCSR
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSR, BlockCSR, bsr_transpose, csr_transpose
 
 
 def random_sparse(rng, m, n, density):
@@ -72,6 +75,144 @@ def test_blockcsr_roundtrip():
 def test_blockcsr_rejects_nondivisible():
     with pytest.raises(ValueError):
         BlockCSR.from_dense(np.zeros((10, 16), np.float32), (16, 16))
+
+
+# --------------------------------------------------------------------------
+# transposes
+# --------------------------------------------------------------------------
+
+def test_csr_transpose_roundtrip_pattern_and_values():
+    rng = np.random.default_rng(4)
+    d = random_sparse(rng, 11, 7, 0.35)
+    d[-2:] = 0.0                                  # trailing all-zero rows
+    a = CSR.from_dense(d, nnz_max=int((d != 0).sum()) + 5)
+    at = csr_transpose(a)
+    assert at.shape == (7, 11)
+    np.testing.assert_array_equal(np.asarray(at.to_dense()), d.T)
+    # involution on the pattern AND the padded containers: same capacity,
+    # identical metadata, identical value vector
+    aa = csr_transpose(at, nnz_max=a.nnz_max)
+    np.testing.assert_array_equal(np.asarray(aa.col_id),
+                                  np.asarray(a.col_id))
+    np.testing.assert_array_equal(np.asarray(aa.row_ptr),
+                                  np.asarray(a.row_ptr))
+    np.testing.assert_array_equal(np.asarray(aa.value),
+                                  np.asarray(a.value))
+
+
+def test_csr_transpose_sorted_columns_and_pad_preservation():
+    rng = np.random.default_rng(5)
+    d = random_sparse(rng, 9, 13, 0.4)
+    a = CSR.from_dense(d, nnz_max=int((d != 0).sum()) + 7)
+    at = csr_transpose(a)
+    rp = np.asarray(at.row_ptr)
+    ci = np.asarray(at.col_id)
+    nnz = int(rp[-1])
+    for i in range(at.shape[0]):                  # sorted, unique columns
+        seg = ci[rp[i]:rp[i + 1]]
+        assert (np.diff(seg) > 0).all()
+    # pad contract preserved: col_id = -1, value = 0 past the live prefix
+    np.testing.assert_array_equal(ci[nnz:], -1)
+    np.testing.assert_array_equal(np.asarray(at.value)[nnz:], 0.0)
+    assert at.nnz_max == a.nnz_max                # capacity carried over
+
+
+def test_csr_transpose_capacity_and_traced_values():
+    d = np.array([[1, 0, 2], [0, 3, 0]], np.float32)
+    a = CSR.from_dense(d, nnz_max=5)
+    with pytest.raises(ValueError):
+        csr_transpose(a, nnz_max=2)               # below live nnz
+    # values may be traced: transpose composes with jit (pattern is host)
+    out = jax.jit(lambda v: csr_transpose(
+        CSR(v, a.col_id, a.row_ptr, a.shape)).value)(a.value)
+    at = csr_transpose(a)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(at.value))
+
+
+def test_bsr_transpose_roundtrip():
+    rng = np.random.default_rng(6)
+    d = np.zeros((32, 48), np.float32)
+    d[0:8, 16:24] = rng.standard_normal((8, 8))
+    d[24:32, 0:8] = rng.standard_normal((8, 8))
+    d[0:8, 40:48] = rng.standard_normal((8, 8))
+    a = BlockCSR.from_dense(d, (8, 8), n_blocks_max=6)
+    at = bsr_transpose(a)
+    assert at.shape == (48, 32) and at.block_shape == (8, 8)
+    np.testing.assert_array_equal(np.asarray(at.to_dense()), d.T)
+    np.testing.assert_array_equal(
+        np.asarray(bsr_transpose(at).to_dense()), d)
+    # pads: col -1, zero payload
+    nnzb = int(np.asarray(at.row_ptr)[-1])
+    np.testing.assert_array_equal(np.asarray(at.block_col)[nnzb:], -1)
+    np.testing.assert_array_equal(np.asarray(at.blocks)[nnzb:], 0.0)
+
+
+def test_csr_to_ell_still_raises_on_truncation_after_transpose():
+    """Regression: the transpose path must not loosen the csr_to_ell
+    silent-truncation guard (PR 2 contract)."""
+    from repro.kernels import csr_to_ell
+    d = np.array([[1, 2, 3], [4, 0, 0], [0, 0, 0]], np.float32)
+    at = csr_transpose(CSR.from_dense(d))
+    # column 0 of d has 2 entries -> row 0 of d^T has 2; asking for 1 drops
+    with pytest.raises(ValueError):
+        csr_to_ell(at, max_row_len=1)
+    vals, cols = csr_to_ell(at, max_row_len=1, truncate=True)
+    assert vals.shape == (3, 1)
+
+
+# --------------------------------------------------------------------------
+# pad contract: trailing all-zero rows never depend on OOB scatter drops
+# --------------------------------------------------------------------------
+
+def test_to_dense_trailing_zero_rows_pad_contract():
+    d = np.zeros((6, 4), np.float32)
+    d[0, 1] = 2.0
+    d[1, 3] = -1.0
+    a = CSR.from_dense(d, nnz_max=9)             # 7 pad slots, rows 2-5 empty
+    a.check_pad_contract()                       # producer upholds it
+    # every pad slot resolves past the last live row: the explicit clamp +
+    # col>=0 mask (not XLA's drop-OOB scatter mode) must keep them inert
+    rows = np.asarray(a.row_ids())
+    assert (rows[int(a.nnz):] >= 2).all()
+    np.testing.assert_array_equal(np.asarray(a.to_dense()), d)
+    # and under jit (scatter lowered, same contract)
+    out = jax.jit(lambda v: CSR(v, a.col_id, a.row_ptr, a.shape).to_dense())(
+        a.value)
+    np.testing.assert_array_equal(np.asarray(out), d)
+    # a hand-built container honouring the contract round-trips too
+    b = CSR(value=jnp.asarray([5.0, 0.0, 0.0]),
+            col_id=jnp.asarray([2, -1, -1], jnp.int32),
+            row_ptr=jnp.asarray([0, 1, 1, 1], jnp.int32), shape=(3, 3))
+    b.check_pad_contract()
+    expect = np.zeros((3, 3), np.float32)
+    expect[0, 2] = 5.0
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), expect)
+    # the validator actually fires on a violating container
+    bad = CSR(value=jnp.asarray([5.0, 1.0, 0.0]),   # pad value != 0
+              col_id=jnp.asarray([2, -1, -1], jnp.int32),
+              row_ptr=jnp.asarray([0, 1, 1, 1], jnp.int32), shape=(3, 3))
+    with pytest.raises(ValueError):
+        bad.check_pad_contract()
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 16), n=st.integers(1, 16),
+    density=st.floats(0.0, 0.6), seed=st.integers(0, 2**16),
+    pad=st.integers(0, 6),
+)
+def test_csr_transpose_property(m, n, density, seed, pad):
+    rng = np.random.default_rng(seed)
+    d = random_sparse(rng, m, n, density)
+    a = CSR.from_dense(d, nnz_max=max(int((d != 0).sum()), 1) + pad)
+    at = csr_transpose(a)
+    np.testing.assert_array_equal(np.asarray(at.to_dense()), d.T)
+    # pattern involution
+    aa = csr_transpose(at, nnz_max=a.nnz_max)
+    np.testing.assert_array_equal(np.asarray(aa.col_id),
+                                  np.asarray(a.col_id))
+    np.testing.assert_array_equal(np.asarray(aa.row_ptr),
+                                  np.asarray(a.row_ptr))
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,4 +1,7 @@
-"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode),
+plus schedule-equivalence: every schedule (balanced / row_atomic / naive)
+must produce the same forward output AND the same gradients, jitted or
+not, with or without a prebuilt plan."""
 
 import jax
 import jax.numpy as jnp
@@ -6,8 +9,9 @@ import numpy as np
 import pytest
 
 from repro.core.csr import CSR, BlockCSR
-from repro.kernels import (csr_to_ell, maple_spmm, maple_spmspm,
-                           moe_expert_gemm)
+from repro.kernels import (csr_to_ell, maple_spgemm, maple_spmm,
+                           maple_spmspm, moe_expert_gemm, plan_spgemm,
+                           plan_spmm_vjp)
 from repro.kernels import ref
 
 
@@ -89,6 +93,117 @@ def test_maple_spmspm_empty_row():
     bd = np.eye(8, dtype=np.float32)
     out = np.asarray(maple_spmspm(CSR.from_dense(ad), CSR.from_dense(bd)))
     np.testing.assert_allclose(out, ad @ bd)
+
+
+# --------------------------------------------------------------------------
+# schedule equivalence: same forward, same gradients, jit or not
+# --------------------------------------------------------------------------
+
+def _sched_operands():
+    rng = np.random.default_rng(42)
+    d, mask = _block_sparse(rng, 32, 48, 8, 8, 0.4, np.float32)
+    a = BlockCSR.from_dense(d, (8, 8), n_blocks_max=int(mask.sum()) + 2)
+    x = jnp.asarray(rng.standard_normal((48, 16)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    return d, a, x, w
+
+
+def _spmm_loss_grads(a, x, w, **kw):
+    def loss(blocks, xx):
+        aa = BlockCSR(blocks, a.block_col, a.block_row, a.row_ptr,
+                      a.shape, a.block_shape)
+        return jnp.sum(maple_spmm(aa, xx, bn=16, **kw) * w)
+    out = maple_spmm(a, x, bn=16, **kw)
+    ga, gx = jax.grad(loss, argnums=(0, 1))(a.blocks, x)
+    return out, ga, gx
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("schedule", ["balanced", "row_atomic", "naive"])
+def test_spmm_schedule_equivalent_forward_and_grads(schedule):
+    d, a, x, w = _sched_operands()
+    out, ga, gx = _spmm_loss_grads(a, x, w, schedule=schedule)
+    ref_out, ref_ga, ref_gx = _spmm_loss_grads(a, x, w, schedule="naive")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ref_ga),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(ref_gx),
+                               rtol=1e-5, atol=1e-5)
+    # ... and against the dense oracle
+    np.testing.assert_allclose(np.asarray(out), d @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("row_atomic", [False, True])
+def test_spmm_jit_nojit_consistent_under_prebuilt_plan(row_atomic):
+    _, a, x, w = _sched_operands()
+    tp = plan_spmm_vjp(a, row_atomic=row_atomic)
+
+    def loss(blocks, xx):
+        aa = BlockCSR(blocks, a.block_col, a.block_row, a.row_ptr,
+                      a.shape, a.block_shape)
+        return jnp.sum(maple_spmm(aa, xx, bn=16, plan=tp) * w)
+
+    eager = (maple_spmm(a, x, bn=16, plan=tp),
+             *jax.grad(loss, argnums=(0, 1))(a.blocks, x))
+    jitted = (jax.jit(lambda blocks, xx: maple_spmm(
+        BlockCSR(blocks, a.block_col, a.block_row, a.row_ptr, a.shape,
+                 a.block_shape), xx, bn=16, plan=tp))(a.blocks, x),
+        *jax.jit(jax.grad(loss, argnums=(0, 1)))(a.blocks, x))
+    for e, j in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(e), np.asarray(j),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("schedule", ["balanced", "row_atomic", "naive"])
+def test_spgemm_schedule_equivalent_forward_and_grads(schedule):
+    rng = np.random.default_rng(31)
+    ad = ((rng.random((12, 10)) < 0.3) * rng.standard_normal((12, 10))
+          ).astype(np.float32)
+    bd = ((rng.random((10, 9)) < 0.3) * rng.standard_normal((10, 9))
+          ).astype(np.float32)
+    a, b = CSR.from_dense(ad), CSR.from_dense(bd)
+
+    def run(sched):
+        def loss(av, bv):
+            c = maple_spgemm(CSR(av, a.col_id, a.row_ptr, a.shape),
+                             CSR(bv, b.col_id, b.row_ptr, b.shape),
+                             schedule=sched)
+            return jnp.sum(c.value ** 2)
+        out = maple_spgemm(a, b, schedule=sched)
+        return (out.value, *jax.grad(loss, argnums=(0, 1))(a.value,
+                                                           b.value))
+
+    got = run(schedule)
+    want = run("naive")
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_spgemm_jit_nojit_consistent_under_prebuilt_plan():
+    rng = np.random.default_rng(33)
+    ad = ((rng.random((10, 10)) < 0.3) * rng.standard_normal((10, 10))
+          ).astype(np.float32)
+    a = CSR.from_dense(ad)
+    plan = plan_spgemm(a, a)
+
+    def loss(av):
+        c = maple_spgemm(CSR(av, a.col_id, a.row_ptr, a.shape),
+                         CSR(av, a.col_id, a.row_ptr, a.shape), plan=plan)
+        return jnp.sum(c.value ** 2)
+
+    ge = jax.grad(loss)(a.value)
+    gj = jax.jit(jax.grad(loss))(a.value)
+    gjo = jax.grad(jax.jit(loss))(a.value)     # grad-of-jit leak regression
+    np.testing.assert_allclose(np.asarray(ge), np.asarray(gj),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ge), np.asarray(gjo),
+                               rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("sizes", [
