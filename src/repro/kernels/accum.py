@@ -1,0 +1,53 @@
+"""Shared PSB accumulation protocol for the Maple kernels.
+
+Every Maple kernel drives the same three-phase accumulator discipline —
+zero the PSB on the first step of a run, accumulate across the run, flush
+exactly once at the last step — and detects run boundaries the same way:
+a pure metadata comparison against the prefetched step stream.  This
+module is the single home of that boundary logic so the planned SpMM
+(both fused output layouts), the naive batched SpMM, the SpGEMM numeric
+kernel and the SDDMM kernels cannot drift apart.
+
+Two boundary shapes exist:
+
+* :func:`run_bounds` — a *row-run* inside a prefetched step stream
+  (``step_row`` / ``block_row``): consecutive steps sharing a row are one
+  PSB visit.  Plans sort each lane by row and pads extend the last run,
+  so the comparison ``row[s] != row[s±1]`` is exact.
+* :func:`tile_bounds` — a *tile sweep* over two sequential grid axes
+  (batch × output tile), used by the block SDDMM whose per-block PSB
+  accumulates over every (g, j) visit and flushes once at the end.
+
+Both return traced booleans suitable for ``@pl.when``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def run_bounds(step_row, base, s, steps):
+    """Row-run boundaries at flattened step ``base + s`` of a lane.
+
+    ``step_row`` is the prefetched (scalar) row stream, ``base`` the
+    lane's offset into it, ``steps`` the per-lane step count.  Returns
+    ``(row, is_first, is_last)``: the output row this step accumulates
+    into and whether the step opens / closes its (lane, row) PSB run.
+    """
+    row = step_row[base + s]
+    is_first = jnp.logical_or(
+        s == 0, row != step_row[base + jnp.maximum(s - 1, 0)])
+    is_last = jnp.logical_or(
+        s == steps - 1, row != step_row[base + jnp.minimum(s + 1, steps - 1)])
+    return row, is_first, is_last
+
+
+def tile_bounds(g, j, n_g, n_j):
+    """Sweep boundaries for a PSB revisited across a (batch, tile) walk.
+
+    First visit is ``(0, 0)``, last is ``(n_g - 1, n_j - 1)`` — the block
+    SDDMM's accumulate-over-everything pattern (one flush per block).
+    """
+    is_first = jnp.logical_and(g == 0, j == 0)
+    is_last = jnp.logical_and(g == n_g - 1, j == n_j - 1)
+    return is_first, is_last

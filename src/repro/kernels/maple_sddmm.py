@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.accum import tile_bounds
 from repro.kernels.compat import tpu_compiler_params
 
 
@@ -64,8 +65,7 @@ def _bsr_kernel(
     g = pl.program_id(1)
     j = pl.program_id(2)
 
-    is_first = jnp.logical_and(g == 0, j == 0)
-    is_last = jnp.logical_and(g == n_g - 1, j == n_j - 1)
+    is_first, is_last = tile_bounds(g, j, n_g, n_j)
 
     @pl.when(is_first)
     def _zero():

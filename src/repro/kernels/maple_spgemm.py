@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.accum import run_bounds
 from repro.kernels.compat import tpu_compiler_params
 
 
@@ -62,14 +63,10 @@ def _kernel(
     l = pl.program_id(0)
     s = pl.program_id(1)
     base = l * steps
-    row = step_row[base + s]
-
     # run boundaries within this lane: the plan sorts each lane's rows, so
-    # a (lane, row) run is contiguous — zero once, flush once.
-    is_first = jnp.logical_or(
-        s == 0, row != step_row[base + jnp.maximum(s - 1, 0)])
-    is_last = jnp.logical_or(
-        s == steps - 1, row != step_row[base + jnp.minimum(s + 1, steps - 1)])
+    # a (lane, row) run is contiguous — zero once, flush once (the shared
+    # accumulation protocol of kernels.accum).
+    _, is_first, is_last = run_bounds(step_row, base, s, steps)
 
     @pl.when(is_first)
     def _zero():

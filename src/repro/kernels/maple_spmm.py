@@ -10,35 +10,39 @@ This is the TPU-granularity realization of the Maple PE (DESIGN §2-B/§3):
   *zero blocks are never moved* (the CSR-metadata walk of the paper, done by
   the Pallas pipeline machinery);
 * the **PSB** is a ``(bm, bn)`` f32 VMEM scratch accumulator that is revisited
-  across consecutive grid steps of the same block-row and written to HBM
+  across consecutive grid steps of the same block-row and leaves the PE
   exactly once per output tile — partial sums never leave the PE, which is
   the paper's entire energy argument restated for the HBM↔VMEM boundary.
-
-Grid layout: ``(N/bn, n_blocks)`` with the block index innermost, blocks
-sorted by block-row (BlockCSR construction order).  Consecutive steps that
-share a block-row accumulate into the same PSB tile; the first visit zeroes
-it (``@pl.when``), the last visit flushes it.
 
 Padding protocol (see ``core.csr.BlockCSR``): padded slots carry
 ``block_col = -1`` and a zero payload, and their ``block_row`` points at the
 last real block-row, so they are harmless accumulations into a tile that is
 flushed anyway.
 
-Two grid layouts live here (the wrappers in ops.py pick one; the seed's
-unbatched ``(N/bn, n_blocks)`` kernel was retired when the wrapper
-normalized every RHS to a batch — a 2D call is the G = 1 case below):
+Three kernels live here (the wrappers in ops.py pick one):
 
-* :func:`maple_spmm_batched_pallas` — the seed walk lifted to a **3D grid**
+* :func:`maple_spmm_batched_pallas` — the naive walk lifted to a **3D grid**
   ``(G, N/bn, n_blocks)`` over a batch of dense right-hand sides sharing
   one A structure (one unsplit block-row after the next — row-atomic;
   kept as the ``naive`` schedule and the jit-friendly path);
-* :func:`maple_spmm_planned_pallas` — the load-balanced grid
-  ``(G, n_lanes, N/bn, steps)`` driven by a ``kernels.schedule.SpmmPlan``:
-  each lane executes its chunk list (scalar-prefetched gather order), owns
-  a PSB per (row-run × N-tile), and flushes into its own slice of a
-  ``(G, n_lanes, M, N)`` buffer; the wrapper masks never-written tiles and
-  tree-sums over lanes — the cross-lane reduction that merges chunks of a
-  split row.
+* :func:`maple_spmm_planned_pallas` — the load-balanced **fused "rmw"**
+  grid ``(G, N/bn, n_lanes, steps)`` driven by a
+  ``kernels.schedule.SpmmPlan``: lanes are a *sequential* ("arbitrary")
+  grid dimension and every (lane, row) PSB run flushes straight into the
+  single ``(G, M, N)`` f32 output.  The first lane to flush a row
+  overwrites; later lanes (chunks of a split row) read-modify-write,
+  merging in f32 — the cross-lane reduction happens **here**, not in an
+  epilogue, so no ``(G, L, M, N)`` lane buffer ever exists;
+* :func:`maple_spmm_compact_pallas` — the fused **"compact"** layout for
+  pipelines that need the lane axis parallel (revisited output tiles
+  cannot be re-fetched there): lanes flush into compact per-lane tiles
+  ``(G, L, r_max·bm, N)`` sized by the plan's ``written`` map (``r_max``
+  = most rows any lane flushes, typically ≪ M/bm), and the ops wrapper
+  merges them with one scatter-add.
+
+Both fused layouts keep partials in f32 until the merge, so a split row
+rounds to the output dtype exactly once — like the naive
+single-accumulator walk.
 """
 
 from __future__ import annotations
@@ -50,6 +54,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.accum import run_bounds
 from repro.kernels.compat import tpu_compiler_params
 
 
@@ -68,12 +73,7 @@ def _batched_kernel(
     n_blocks: int,
 ):
     s = pl.program_id(2)
-
-    is_first = jnp.logical_or(
-        s == 0, block_row[s] != block_row[jnp.maximum(s - 1, 0)])
-    is_last = jnp.logical_or(
-        s == n_blocks - 1,
-        block_row[s] != block_row[jnp.minimum(s + 1, n_blocks - 1)])
+    _, is_first, is_last = run_bounds(block_row, 0, s, n_blocks)
 
     @pl.when(is_first)
     def _zero():
@@ -132,31 +132,25 @@ def maple_spmm_batched_pallas(
 
 
 # --------------------------------------------------------------------------
-# planned lane-parallel grid: SpmmPlan-driven chunk execution
+# planned fused "rmw" grid: sequential lanes, in-kernel cross-lane merge
 # --------------------------------------------------------------------------
 
-def _planned_kernel(
+def _planned_rmw_kernel(
     order,              # (L*S,) int32 scalar prefetch: gather into blocks
     step_row,           # (L*S,) int32: output block-row per step
     step_col,           # (L*S,) int32: B block-col per step, -1 on pads
+    step_acc,           # (L*S,) int32: 1 -> flush accumulates, 0 -> inits
     a_blk_ref,          # (1, bm, bk) block selected by order
     b_panel_ref,        # (1, bk, bn) panel selected by step_col
-    out_ref,            # (1, 1, bm, bn) — (g, lane, row, j) tile
-    psb_ref,            # (bm, bn) f32 — this lane's PSB
+    out_ref,            # (1, bm, bn) — (g, row, j) tile of C, revisited
+    psb_ref,            # (bm, bn) f32 — the PSB
     *,
     steps: int,
 ):
-    l = pl.program_id(1)
+    l = pl.program_id(2)
     s = pl.program_id(3)
     base = l * steps
-    row = step_row[base + s]
-
-    # run boundaries *within this lane*: the plan sorts each lane's chunks
-    # by row, so a (lane, row) run is contiguous — zero once, flush once.
-    is_first = jnp.logical_or(
-        s == 0, row != step_row[base + jnp.maximum(s - 1, 0)])
-    is_last = jnp.logical_or(
-        s == steps - 1, row != step_row[base + jnp.minimum(s + 1, steps - 1)])
+    _, is_first, is_last = run_bounds(step_row, base, s, steps)
 
     @pl.when(is_first)
     def _zero():
@@ -171,7 +165,12 @@ def _planned_kernel(
 
     @pl.when(is_last)
     def _flush():
-        out_ref[0, 0] = psb_ref[...].astype(out_ref.dtype)
+        # the cross-lane merge: the row's first flusher (plan-designated)
+        # overwrites whatever the tile held, later flushers of a split row
+        # read the previous flush back and add in f32.  Phantom runs (idle
+        # lanes) carry acc = 1 and a zero PSB — they can't clobber anything.
+        prev = jnp.where(step_acc[base + s] > 0, out_ref[0], 0.0)
+        out_ref[0] = prev + psb_ref[...]
 
 
 def maple_spmm_planned_pallas(
@@ -179,18 +178,32 @@ def maple_spmm_planned_pallas(
     order: jax.Array,       # (L, S) int32
     step_row: jax.Array,    # (L, S) int32
     step_col: jax.Array,    # (L, S) int32, -1 pads
+    step_acc: jax.Array,    # (L, S) int32, 1 where a flush accumulates
     b_dense: jax.Array,     # (G, K, N)
     *,
     m: int,
     bn: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    """Plan-driven SpMM.  Returns per-lane partials ``(G, L, M, N)`` in
-    **f32** — partials of a split row must survive until the cross-lane
-    reduction at full accumulator precision, or the planned schedule would
-    round twice where the naive one rounds once.  The ops.py wrapper masks
-    unwritten (lane, row) tiles, reduces over lanes, and casts
-    (raw kernel — no padding/masking logic here)."""
+    """Plan-driven fused SpMM.  Returns the merged ``(G, M, N)`` output in
+    **f32** — partials of a split row are combined at full accumulator
+    precision inside the kernel (first flush overwrites, later flushes
+    read-modify-write), so the planned schedule rounds once exactly like
+    the naive walk.  The lane axis is *sequential* ("arbitrary"): flush
+    order across lanes is the plan's lane order, which is what makes the
+    plan's ``step_acc`` initializer flags exact.  Rows no lane ever
+    flushes are left untouched — the ops wrapper zero-masks them with the
+    plan's cached ``row_mask`` (raw kernel — no padding/masking here)."""
+    if not interpret:
+        # the accumulating flush reads a *previously flushed* output tile
+        # back at a non-consecutive grid revisit.  The interpreter's
+        # per-step block load/store guarantees that; Mosaic's write-only
+        # output pipelining does not — refuse loudly rather than compute
+        # garbage split rows on a compiled target.
+        raise NotImplementedError(
+            "the rmw fused layout requires interpret mode (revisited "
+            "output tiles must be re-fetched); build the plan with "
+            "fused='compact' for compiled TPU targets")
     n_blocks, bm, bk = blocks.shape
     g, k, n = b_dense.shape
     lanes, steps = order.shape
@@ -198,36 +211,139 @@ def maple_spmm_planned_pallas(
         raise ValueError(f"N={n} not divisible by bn={bn}")
     if m % bm or k % bk:
         raise ValueError(f"({m},{k}) not divisible by block ({bm},{bk})")
+    grid = (g, n // bn, lanes, steps)
+
+    flat_order = order.reshape(-1).astype(jnp.int32)
+    flat_row = step_row.reshape(-1).astype(jnp.int32)
+    flat_col = step_col.reshape(-1).astype(jnp.int32)
+    flat_acc = step_acc.reshape(-1).astype(jnp.int32)
+
+    kernel = functools.partial(_planned_rmw_kernel, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, bm, bk),
+                    lambda gi, j, l, s, o, r, c, a: (o[l * steps + s], 0, 0)),
+                pl.BlockSpec(
+                    (1, bk, bn),
+                    lambda gi, j, l, s, o, r, c, a: (
+                        gi, jnp.maximum(c[l * steps + s], 0), j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bm, bn),
+                lambda gi, j, l, s, o, r, c, a: (gi, r[l * steps + s], j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
+        interpret=interpret,
+        # lanes merge into shared output tiles -> sequential, NOT parallel;
+        # the batch and output-tile axes stay parallel (disjoint tiles)
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary"),
+        ),
+    )(flat_order, flat_row, flat_col, flat_acc, blocks, b_dense)
+
+
+# --------------------------------------------------------------------------
+# planned fused "compact" grid: parallel lanes, plan-sized flush tiles
+# --------------------------------------------------------------------------
+
+def _planned_compact_kernel(
+    order,              # (L*S,) int32 scalar prefetch: gather into blocks
+    step_row,           # (L*S,) int32: output block-row per step
+    step_col,           # (L*S,) int32: B block-col per step, -1 on pads
+    flush_slot,         # (L*S,) int32: compact slot this run flushes to
+    a_blk_ref,          # (1, bm, bk) block selected by order
+    b_panel_ref,        # (1, bk, bn) panel selected by step_col
+    out_ref,            # (1, 1, bm, bn) — (g, lane, slot, j) compact tile
+    psb_ref,            # (bm, bn) f32 — this lane's PSB
+    *,
+    steps: int,
+):
+    l = pl.program_id(1)
+    s = pl.program_id(3)
+    base = l * steps
+    _, is_first, is_last = run_bounds(step_row, base, s, steps)
+
+    @pl.when(is_first)
+    def _zero():
+        psb_ref[...] = jnp.zeros_like(psb_ref)
+
+    live = step_col[base + s] >= 0
+    a = jnp.where(live, a_blk_ref[0], jnp.zeros_like(a_blk_ref[0]))
+    psb_ref[...] += jnp.dot(
+        a, b_panel_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(is_last)
+    def _flush():
+        out_ref[0, 0] = psb_ref[...]
+
+
+def maple_spmm_compact_pallas(
+    blocks: jax.Array,      # (n_blocks, bm, bk)
+    order: jax.Array,       # (L, S) int32
+    step_row: jax.Array,    # (L, S) int32
+    step_col: jax.Array,    # (L, S) int32, -1 pads
+    flush_slot: jax.Array,  # (L, S) int32 compact flush slots
+    b_dense: jax.Array,     # (G, K, N)
+    *,
+    r_max: int,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Plan-driven fused SpMM, compact-flush layout.  Returns per-lane
+    flush tiles ``(G, L, r_max·bm, N)`` in **f32**, sized by the plan's
+    ``written`` map — lane ``l``'s ``t``-th flushed row lands in slot
+    ``t`` (``plan.slot_row`` inverts the map; dead slots are never
+    written).  The ops wrapper scatter-adds slots into the ``(G, M, N)``
+    result in f32 — the cross-lane merge — and only then casts.  Lanes
+    write disjoint slices, so the lane axis stays parallel (raw kernel —
+    no padding/masking logic here)."""
+    n_blocks, bm, bk = blocks.shape
+    g, k, n = b_dense.shape
+    lanes, steps = order.shape
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    if k % bk:
+        raise ValueError(f"K={k} not divisible by block k={bk}")
     grid = (g, lanes, n // bn, steps)
 
     flat_order = order.reshape(-1).astype(jnp.int32)
     flat_row = step_row.reshape(-1).astype(jnp.int32)
     flat_col = step_col.reshape(-1).astype(jnp.int32)
+    flat_slot = flush_slot.reshape(-1).astype(jnp.int32)
 
-    kernel = functools.partial(_planned_kernel, steps=steps)
+    kernel = functools.partial(_planned_compact_kernel, steps=steps)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=[
                 pl.BlockSpec(
                     (1, bm, bk),
-                    lambda gi, l, j, s, o, r, c: (o[l * steps + s], 0, 0)),
+                    lambda gi, l, j, s, o, r, c, f: (o[l * steps + s], 0, 0)),
                 pl.BlockSpec(
                     (1, bk, bn),
-                    lambda gi, l, j, s, o, r, c: (
+                    lambda gi, l, j, s, o, r, c, f: (
                         gi, jnp.maximum(c[l * steps + s], 0), j)),
             ],
             out_specs=pl.BlockSpec(
                 (1, 1, bm, bn),
-                lambda gi, l, j, s, o, r, c: (gi, l, r[l * steps + s], j)),
+                lambda gi, l, j, s, o, r, c, f: (gi, l, f[l * steps + s], j)),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((g, lanes, m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((g, lanes, r_max * bm, n),
+                                       jnp.float32),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),
-    )(flat_order, flat_row, flat_col, blocks, b_dense)
+    )(flat_order, flat_row, flat_col, flat_slot, blocks, b_dense)

@@ -29,6 +29,7 @@ from repro.kernels.maple_sddmm import (maple_sddmm_bsr_pallas,
                                        maple_sddmm_csr_pallas)
 from repro.kernels.maple_spgemm import maple_spgemm_pallas
 from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
+                                      maple_spmm_compact_pallas,
                                       maple_spmm_planned_pallas)
 from repro.kernels.maple_spmspm import maple_spmspm_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
@@ -43,12 +44,6 @@ def _float0(x):
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-# ceiling for the planned kernel's (G, n_lanes, M, N) f32 per-lane partial
-# buffer; auto-planning trims n_lanes to stay under it (wide outputs would
-# otherwise multiply their peak memory by the lane count)
-LANE_BUDGET_BYTES = 256 * 1024 * 1024
 
 
 # --------------------------------------------------------------------------
@@ -107,9 +102,21 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     jnp gather/scatter backward at block granularity (same contraction,
     no kernel, O(nnz_blocks × bn) gather buffers).
 
+    **Fused output dataflow**: the cross-lane reduction that merges
+    chunks of a split row happens *inside the planned kernel* (see
+    ``kernels.maple_spmm`` and ``SpmmPlan.fused``) — no full ``(G,
+    lanes, M, N)`` per-lane buffer is materialized, forward or backward.
+    On the rmw path (interpreted calls, the measured target) peak output
+    memory is the ``(G, M, N)`` result itself regardless of ``n_lanes``;
+    compiled calls take the compact path, whose flush tiles are bounded
+    by the plan's ``written`` map (``G·L·r_max·bm·N`` — typically ≪ the
+    retired buffer, equal to it only in the degenerate worst case where
+    some lane flushes every row).
+
     Empty block-rows never flush a PSB; their output tiles are explicitly
-    zero-masked (naive path: from row_ptr; planned paths: from the plan's
-    ``written`` map, which also discards never-flushed lane tiles).
+    zero-masked (naive path: from row_ptr; rmw planned path: from the
+    plan's cached ``row_mask``; the compact path's scatter-add leaves
+    them zero by construction).
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -147,25 +154,24 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
         if plan.order.size and int(plan.order.max()) >= a.n_blocks_max:
             raise ValueError("plan indexes blocks beyond the operand's "
                              "capacity — was it built for this weight?")
-
-    # per-lane f32 partial buffers: (lanes, M, N) on the forward pass,
-    # (lanes, K, N) on the backward A^T pass — each budgeted on its own
-    # axis so forward-only serving keeps its lane parallelism
-    k = a.shape[1]
-    def _lanes_for(rows):
-        tile_bytes = 4 * rows * b3.shape[-1] * b3.shape[0]
-        return max(1, min(n_lanes, LANE_BUDGET_BYTES // max(tile_bytes, 1)))
+        if (plan.block_m, plan.block_k) != a.block_shape:
+            raise ValueError(
+                f"plan was built for blocks "
+                f"({plan.block_m}, {plan.block_k}), operand blocks are "
+                f"{a.block_shape} — was it built for this weight?")
     if plan is None and schedule != "naive":
-        # callers that pass an explicit plan keep full control; auto
-        # planning respects the lane-buffer budget
-        plan = plan_spmm(a, n_lanes=_lanes_for(m), chunk=chunk,
+        # the fused kernels never materialize the full per-lane buffer
+        # (rmw: none at all; compact: written-map-sized tiles), so auto
+        # planning takes n_lanes at face value — the retired lane-buffer
+        # path needed a 256 MB budget cap here
+        plan = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
                          row_atomic=(schedule == "row_atomic"))
 
     # kernel-path VJP: armed by a prebuilt SpmmTrainPlan, or — when the
     # pattern is concrete (eager) — built LAZILY on the first backward
     # pass, so forward-only calls never pay for the transpose-side plan.
     # The eager thunk reuses the forward plan just built (no second LPT
-    # walk) and budgets the A^T lanes on K.
+    # walk).
     if train is not None:
         train_thunk = lambda t=train: t
     elif traced_meta:
@@ -173,7 +179,7 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     else:
         memo = []
 
-        def train_thunk(a=a, fwd=plan, lanes=_lanes_for(k), chunk=chunk,
+        def train_thunk(a=a, fwd=plan, lanes=n_lanes, chunk=chunk,
                         ra=(schedule == "row_atomic")):
             if not memo:
                 memo.append(plan_spmm_vjp(a, n_lanes=lanes, chunk=chunk,
@@ -186,22 +192,62 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     return out if batched else out[0]
 
 
+def _planned_spmm_f32(blocks, b3, plan: SpmmPlan, *, bn: int,
+                      interpret: bool) -> jax.Array:
+    """Fused planned SpMM → merged ``(G, m, N)`` **f32** (cast is the
+    caller's).  Output geometry (``m``, ``bm``) comes from the plan
+    itself — the one place it is authoritative for both the forward and
+    the transpose-side (bwd) pass, so a mis-built plan cannot silently
+    mis-reshape the merge.  The cross-lane reduction happens in-kernel (``"rmw"``) or
+    via the compact-tile scatter-add (``"compact"``); either way no
+    ``(G, lanes, m, N)`` intermediate exists.
+
+    The layout is dispatched **per call**: every plan carries both
+    layouts' metadata, and ``plan.fused`` is only a preference — rmw's
+    accumulating flush needs the interpreter's revisited-output-tile
+    re-fetch, so compiled (``interpret=False``) calls always take the
+    compact path, forward and backward alike (no layout can mismatch
+    between the two passes of one VJP).  Plan arrays become device
+    constants *here*, inside the custom_vjp bodies that call this — see
+    the grad-of-jit note in :func:`_spgemm_value_call`."""
+    bm = plan.block_m
+    m = plan.n_block_rows * bm
+    if plan.fused == "compact" or not interpret:
+        tiles = maple_spmm_compact_pallas(
+            blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), jnp.asarray(plan.flush_slot),
+            b3, r_max=plan.r_max, bn=bn, interpret=interpret)
+        g, n = b3.shape[0], b3.shape[-1]
+        gm = plan.n_block_rows
+        tiles = tiles.reshape(g, plan.n_lanes * plan.r_max, bm, n)
+        # dead slots were never flushed (their contents are undefined) —
+        # scatter them into a sacrificial block-row and slice it off;
+        # duplicate slot targets are the split rows, merged here in f32
+        slot_row = np.where(plan.slot_row < 0, gm, plan.slot_row)
+        merged = jnp.zeros((g, gm + 1, bm, n), jnp.float32)
+        merged = merged.at[:, jnp.asarray(slot_row.reshape(-1))].add(tiles)
+        return merged[:, :gm].reshape(g, m, n)
+    out = maple_spmm_planned_pallas(
+        blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+        jnp.asarray(plan.step_col), jnp.asarray(plan.step_acc),
+        b3, m=m, bn=bn, interpret=interpret)
+    # rows no lane flushes were never initialized — zero them from the
+    # row mask the plan cached at construction
+    mask = jnp.asarray(plan.row_mask)                     # (m,)
+    return jnp.where(mask[None, :, None], out, 0)
+
+
 def _spmm_forward(blocks, block_row, block_col, row_ptr, b3, *,
                   plan: SpmmPlan | None, m: int, bm: int, bn: int,
                   interpret: bool) -> jax.Array:
-    """Primal SpMM: planned lane grid when a plan is given, else the naive
+    """Primal SpMM: fused planned grid when a plan is given, else the naive
     batched walk over (possibly traced) container metadata."""
     if plan is not None:
-        lanes = maple_spmm_planned_pallas(
-            blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
-            jnp.asarray(plan.step_col), b3, m=m, bn=bn, interpret=interpret)
-        # discard tiles no (lane, row) run ever flushed, then merge the
-        # per-lane f32 partials — the cross-lane reduction of split rows —
-        # and only then round to the output dtype (one rounding, like the
-        # naive single-accumulator walk).
-        mask = jnp.repeat(jnp.asarray(plan.written), bm, axis=1)  # (L, M)
-        lanes = jnp.where(mask[None, :, :, None], lanes, 0)
-        return lanes.sum(axis=1).astype(b3.dtype)
+        out = _planned_spmm_f32(blocks, b3, plan, bn=bn,
+                                interpret=interpret)
+        # split-row partials merged in f32 above; round once, like the
+        # naive single-accumulator walk
+        return out.astype(b3.dtype)
     out = maple_spmm_batched_pallas(
         blocks, block_row, block_col, b3, m=m, bn=bn, interpret=interpret)
     # mask tiles of block-rows that own no non-zero block
@@ -216,22 +262,18 @@ def _spmm_bwd_kernel_path(blocks, b3, dc, train: SpmmTrainPlan, *,
     backward: dB = A^T @ dC on the cached transpose-side plan, dA via the
     block SDDMM sampled at A's pattern."""
     bm, bk = train.block_shape
-    k = train.shape[1]
     cap = train.n_blocks_max
     nnzb = int(train.t_perm.size)
 
-    # --- dB = A^T @ dC: transposed payload gather + the planned kernel.
+    # --- dB = A^T @ dC: transposed payload gather + the fused planned
+    # kernel on the cached transpose-side plan (in-kernel lane merge — no
+    # (G, lanes, K, N) intermediate on the backward either).
     at_blocks = jnp.zeros((cap, bk, bm), blocks.dtype)
     if nnzb:
         gathered = jnp.swapaxes(blocks[jnp.asarray(train.t_perm)], 1, 2)
         at_blocks = at_blocks.at[:nnzb].set(gathered)
-    lanes = maple_spmm_planned_pallas(
-        at_blocks, jnp.asarray(train.bwd.order),
-        jnp.asarray(train.bwd.step_row), jnp.asarray(train.bwd.step_col),
-        dc, m=k, bn=bn, interpret=interpret)
-    mask = jnp.repeat(jnp.asarray(train.bwd.written), bk, axis=1)  # (L, K)
-    lanes = jnp.where(mask[None, :, :, None], lanes, 0)
-    db = lanes.sum(axis=1).astype(b3.dtype)
+    db = _planned_spmm_f32(at_blocks, dc, train.bwd, bn=bn,
+                           interpret=interpret).astype(b3.dtype)
 
     # --- dA = (dC @ B^T) sampled at nnz(A): the block SDDMM.
     da = maple_sddmm_bsr_pallas(
@@ -562,17 +604,33 @@ def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:
     """C = A_csr @ B via the element-granular Maple walk → dense (M, N).
 
     .. deprecated:: prefer :func:`maple_spgemm`, which keeps the output
-       sparse.  When ``b`` is a CSR with host metadata this routes through
-       the two-phase SpGEMM kernel (B stays compressed; only the *result*
-       is densified to preserve this function's dense return contract).
-       The legacy positional-PSB kernel remains for explicitly dense ``b``
-       — the BRB-after-fill view — and for traced metadata under jit.
+       sparse — densifying C here is exactly the traffic the row-wise
+       product exists to avoid, and callers that only need C's values
+       should consume the padded CSR it returns.  When ``b`` is a CSR
+       with host metadata this routes through the two-phase SpGEMM kernel
+       (B stays compressed) and densifies the *result* directly from the
+       padded-CSR payload: the pattern is host metadata from the symbolic
+       phase, so only the live ``nnz(C)`` prefix is scattered once — not
+       the old ``CSR.to_dense()`` round trip, which re-scattered every
+       capacity slot through pad clamping and masking.  The legacy
+       positional-PSB kernel remains for explicitly dense ``b`` — the
+       BRB-after-fill view — and for traced metadata under jit.
     """
     if interpret is None:
         interpret = _default_interpret()
     if isinstance(b, CSR) and not _has_traced_metadata(
             a.row_ptr, a.col_id, b.row_ptr, b.col_id):
-        return maple_spgemm(a, b, interpret=interpret).to_dense()
+        c = maple_spgemm(a, b, interpret=interpret)
+        m, n = a.shape[0], b.shape[1]
+        rptr = np.asarray(c.row_ptr)
+        nnz_c = int(rptr[-1])
+        rows = np.repeat(np.arange(m, dtype=np.int32), np.diff(rptr))
+        cols = np.asarray(c.col_id)[:nnz_c]
+        dense = jnp.zeros((m, n), c.value.dtype)
+        if nnz_c:
+            dense = dense.at[jnp.asarray(rows), jnp.asarray(cols)].set(
+                c.value[:nnz_c])
+        return dense
     values, col_ids = csr_to_ell(a)
     b_rows = b.to_dense() if isinstance(b, CSR) else b
     return maple_spmspm_pallas(values, col_ids, b_rows, interpret=interpret)

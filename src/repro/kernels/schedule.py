@@ -26,8 +26,10 @@ Two specializations:
 * :class:`SpmmPlan` (:func:`plan_spmm`) — block granularity.  Heavy
   block-rows are **split into bounded-size row-chunks** (the multi-MAC
   ``m`` knob realized as parallel accumulation lanes; chunks of one row
-  accumulate concurrently and are reduced across lanes at the end,
-  removing the ``max_row`` term of the cycle model).
+  accumulate concurrently and are merged *inside the kernel* — the plan
+  derives the first/last-flush flags and compact flush-slot maps the
+  fused output dataflow runs on — removing the ``max_row`` term of the
+  cycle model without ever materializing a per-lane output buffer).
 * :class:`SpgemmPlan` (:func:`plan_spgemm`) — element granularity, the
   sparse-output C = A·B path.  Construction *is* the **symbolic phase** of
   the two-phase SpGEMM protocol: it computes the exact output sparsity
@@ -183,21 +185,121 @@ class SpmmPlan(ExecutionPlan):
     The work unit is one non-zero (bm, bk) block-MAC; ``order`` gathers
     into ``a.blocks`` and ``step_col`` selects B block-columns.  Pad steps
     repeat the lane's last real row so each (lane, row) run stays one
-    contiguous zero-once/flush-once PSB visit, and the wrapper zero-masks
-    tiles ``written`` says were never flushed before reducing over lanes
-    (the cross-lane reduction that merges chunks of a split row).
+    contiguous zero-once/flush-once PSB visit.
+
+    The cross-lane reduction that merges chunks of a split row happens
+    **inside the kernel** (the fused output dataflow — the per-lane
+    ``(G, L, M, N)`` partial buffer of earlier revisions is gone), driven
+    by metadata this plan derives once at construction:
+
+    * ``fused`` — which fused output layout the kernel executes:
+
+      - ``"rmw"`` — lanes run as a *sequential* grid dimension and flush
+        straight into the single ``(G, M, N)`` output; the first lane to
+        flush a row overwrites, later lanes read-modify-write in f32.
+      - ``"compact"`` — lanes stay parallel and flush into compact
+        per-lane tiles ``(G, L, r_max·bm, N)`` sized by ``written``
+        (``r_max`` = most rows any lane flushes), merged by one
+        scatter-add; no full-size lane buffer exists in either mode.
+
+    * ``step_acc[l, s]`` — 1 where a flush must accumulate into the
+      already-written output tile, 0 where this lane is the row's
+      initializer (the lowest-indexed lane that flushes the row — grid
+      traversal order).  Phantom runs (idle lanes draining pad steps)
+      always accumulate, so they can never clobber a real tile.
+    * ``flush_slot[l, s]`` / ``slot_row[l, t]`` — the compact layout's
+      flush-slot map: lane ``l`` flushes its ``t``-th distinct row into
+      slot ``t``; ``slot_row`` inverts that (``-1`` on dead slots, which
+      the wrapper scatters into a sacrificial row).
+    * ``row_mask`` — the ``(M,)`` rows-ever-flushed mask at *element*
+      granularity, cached here so the rmw wrapper never rebuilds the
+      ``jnp.repeat`` per call (empty block-rows are zero-masked with it).
+
+    All of this is derived from ``order``/``step_row``/``written`` alone,
+    so hand-built or lane-permuted plans stay self-consistent.
     """
 
     def __init__(self, *, order: np.ndarray, step_row: np.ndarray,
                  step_col: np.ndarray, written: np.ndarray, chunk: int,
-                 n_block_rows: int, n_real_steps: int, stats: SpGEMMStats):
+                 n_block_rows: int, n_real_steps: int, stats: SpGEMMStats,
+                 block_m: int, block_k: int, fused: str = "rmw"):
+        # the full block shape is required (not defaulted): the cached
+        # row_mask and traffic model are sized by block_m, step_col
+        # indexes B panels at block_k granularity, and a silently wrong
+        # default would only surface later as a confusing call-time
+        # mismatch — or, for block_k, as silently wrong panels
         super().__init__(order=order, step_row=step_row, step_col=step_col,
                          written=written, chunk=chunk, n_rows=n_block_rows,
                          n_real_steps=n_real_steps, stats=stats)
+        if fused not in ("rmw", "compact"):
+            raise ValueError(f"unknown fused mode {fused!r}")
+        n_lanes = order.shape[0]
+        gm = n_block_rows
+        rows = np.clip(step_row, 0, max(gm - 1, 0))
+        any_writer = written.any(axis=0) if gm else np.zeros(0, bool)
+        # lowest-indexed lane flushing each row == first flush in the
+        # rmw grid traversal (lanes are a sequential axis there)
+        first_lane = np.where(any_writer, written.argmax(axis=0), -1)
+        lane_idx = np.arange(n_lanes, dtype=np.int64)[:, None]
+        if gm:
+            owns = np.take_along_axis(written, rows, axis=1)
+            is_init = owns & (first_lane[rows] == lane_idx)
+        else:
+            is_init = np.zeros(step_row.shape, bool)
+        step_acc = (~is_init).astype(np.int32)
+        # compact flush slots: lane l's t-th distinct flushed row -> slot t
+        r_max = max(int(written.sum(axis=1).max(initial=0)), 1)
+        slot_of = np.zeros((n_lanes, max(gm, 1)), np.int32)
+        slot_row = np.full((n_lanes, r_max), -1, np.int32)
+        for l in range(n_lanes):
+            rows_l = np.nonzero(written[l])[0]
+            slot_of[l, rows_l] = np.arange(rows_l.size, dtype=np.int32)
+            slot_row[l, :rows_l.size] = rows_l
+        flush_slot = (np.take_along_axis(slot_of, rows, axis=1)
+                      if gm else np.zeros(step_row.shape, np.int32))
+        object.__setattr__(self, "fused", fused)
+        object.__setattr__(self, "block_m", int(block_m))
+        object.__setattr__(self, "block_k", int(block_k))
+        object.__setattr__(self, "step_acc", step_acc)
+        object.__setattr__(self, "flush_slot", flush_slot.astype(np.int32))
+        object.__setattr__(self, "slot_row", slot_row)
+        object.__setattr__(self, "r_max", r_max)
+        object.__setattr__(self, "row_mask", np.repeat(any_writer, block_m))
 
     @property
     def n_block_rows(self) -> int:
         return self.n_rows
+
+    def output_traffic_bytes(self, g: int, n_cols: int, *,
+                             itemsize: int = 4,
+                             mode: Optional[str] = None) -> int:
+        """Output-side HBM bytes the dataflow moves (model estimate).
+
+        ``mode`` defaults to the plan's ``fused`` layout; ``"epilogue"``
+        prices the *retired* full lane-buffer path for trajectory
+        comparisons (write + re-read of ``(G, L, M, N)`` plus the merged
+        result) — it is not executable anymore, only priced.
+        """
+        mode = mode or self.fused
+        bm = self.block_m
+        m = self.n_rows * bm
+        tile_rows_flushed = int(self.written.sum())
+        rows_written = int(self.written.any(axis=0).sum())
+        final = g * m * n_cols * itemsize
+        if mode == "rmw":
+            # flushes write straight into the (G, M, N) result; every
+            # accumulating flush re-reads the tile it merges into
+            writes = g * tile_rows_flushed * bm * n_cols * itemsize
+            rereads = g * max(tile_rows_flushed - rows_written, 0) \
+                * bm * n_cols * itemsize
+            return writes + rereads
+        if mode == "compact":
+            buf = g * self.n_lanes * self.r_max * bm * n_cols * itemsize
+            return 2 * buf + final
+        if mode == "epilogue":
+            buf = g * self.n_lanes * m * n_cols * itemsize
+            return 2 * buf + final
+        raise ValueError(f"unknown traffic mode {mode!r}")
 
 
 def _default_chunk(nnzb: int, n_lanes: int) -> int:
@@ -209,15 +311,29 @@ def _default_chunk(nnzb: int, n_lanes: int) -> int:
 
 def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
               chunk: Optional[int] = None,
-              row_atomic: bool = False) -> SpmmPlan:
+              row_atomic: bool = False,
+              fused: str = "auto") -> SpmmPlan:
     """Build a load-balanced lane schedule from BlockCSR metadata.
 
     ``row_atomic=True`` keeps every block-row whole (one chunk per row) —
     the MatRaptor-style baseline schedule, exposed so benchmarks and tests
     can price both on identical machinery.
+
+    ``fused`` selects the *preferred* in-kernel cross-lane merge layout
+    (see :class:`SpmmPlan`); every plan derives both layouts' metadata,
+    and the executing wrapper honors the preference only where it is
+    valid: ``"rmw"`` needs the interpreter's revisited-output-tile
+    re-fetch, so compiled (``interpret=False``) calls always run
+    ``"compact"`` whatever the plan prefers.  ``"auto"`` resolves to
+    ``"rmw"`` — the layout ``benchmarks/kernel_bench.py`` validated
+    fastest on the measured (interpret-mode) target: same grid, *zero*
+    epilogue, smallest output footprint.  Both layouts are benchmarked
+    side by side in ``BENCH_kernels.json``.
     """
     if n_lanes < 1:
         raise ValueError(f"n_lanes={n_lanes} < 1")
+    if fused == "auto":
+        fused = "rmw"
     rptr = np.asarray(a.row_ptr).astype(np.int64)
     cols = np.asarray(a.block_col).astype(np.int32)
     gm = a.n_block_rows
@@ -274,7 +390,9 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
 
     return SpmmPlan(order=order, step_row=step_row, step_col=step_col,
                     written=written, chunk=chunk, n_block_rows=gm,
-                    n_real_steps=n_real, stats=stats)
+                    n_real_steps=n_real, stats=stats,
+                    block_m=a.block_shape[0], block_k=a.block_shape[1],
+                    fused=fused)
 
 
 # --------------------------------------------------------------------------
@@ -340,6 +458,7 @@ class SpmmTrainPlan:
 def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
                   chunk: Optional[int] = None,
                   row_atomic: bool = False,
+                  fused: str = "auto",
                   fwd: Optional[SpmmPlan] = None) -> SpmmTrainPlan:
     """Build the forward plan and cache the transpose-side plan with it.
 
@@ -353,7 +472,7 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
     """
     if fwd is None:
         fwd = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
-                        row_atomic=row_atomic)
+                        row_atomic=row_atomic, fused=fused)
     cap = a.n_blocks_max
     bm, bk = a.block_shape
     # the pad convention for the transposed metadata lives in ONE place:
@@ -369,7 +488,7 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
         row_ptr=t_rptr, shape=(a.shape[1], a.shape[0]),
         block_shape=(bk, bm))
     bwd = plan_spmm(at_pattern, n_lanes=n_lanes, chunk=chunk,
-                    row_atomic=row_atomic)
+                    row_atomic=row_atomic, fused=fused)
     return SpmmTrainPlan(
         fwd=fwd, bwd=bwd, t_perm=perm,
         t_block_row=t_block_row, t_block_col=t_block_col, t_row_ptr=t_rptr,

@@ -13,7 +13,6 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.csr import BlockCSR
@@ -62,33 +61,17 @@ class SparseLogitHead:
         add the A^T-pass breakdown)."""
         return self.plan.predicted_cycles()
 
-    def _reduced_plan(self, n_lanes: int):
-        """Same planner, fewer lanes — memoized per lane count so the
-        over-budget path neither re-plans per step nor drops the train
-        plan (which would silently demote trainable heads to the naive
-        schedule + jnp backward under jit)."""
-        cache = self.__dict__.setdefault("_reduced_plans", {})
-        if n_lanes not in cache:
-            planner = (plan_spmm_vjp if isinstance(self.plan, SpmmTrainPlan)
-                       else plan_spmm)
-            cache[n_lanes] = planner(self.weight, n_lanes=n_lanes,
-                                     chunk=self._fwd_plan.chunk or None)
-        return cache[n_lanes]
-
     def __call__(self, hidden: jax.Array) -> jax.Array:
-        """hidden: (B, S, D) → logits (B, S, V) in one batched launch."""
-        from repro.kernels.ops import LANE_BUDGET_BYTES
-        # a prebuilt plan pins n_lanes; when vocab × tokens is wide enough
-        # that the per-lane partial buffer would blow the budget, swap in
-        # a reduced-lane plan (same planner, so trainable heads keep their
-        # transpose-side schedule) rather than dropping the plan
-        tokens = int(np.prod(hidden.shape[:-1])) if hidden.ndim > 1 else 1
-        tile = 4 * self.weight.shape[0] * tokens
-        lanes_fit = max(1, LANE_BUDGET_BYTES // max(tile, 1))
-        plan = self.plan
-        if lanes_fit < self._fwd_plan.n_lanes:
-            plan = self._reduced_plan(int(lanes_fit))
-        return sparse_linear(self.weight, hidden, plan=plan)
+        """hidden: (B, S, D) → logits (B, S, V) in one batched launch.
+
+        The fused planned kernels merge cross-lane partials in-kernel:
+        on the rmw path (interpreted calls) peak output memory is the
+        logits themselves regardless of the plan's lane count, and the
+        compact path's flush tiles are bounded by the plan's ``written``
+        map rather than ``lanes × V`` — so the lane-buffer budget (and
+        the reduced-lane replanning it forced on wide vocab × token
+        shapes) is gone with the ``(G, lanes, V, N)`` buffer itself."""
+        return sparse_linear(self.weight, hidden, plan=self.plan)
 
 
 @dataclasses.dataclass(frozen=True)

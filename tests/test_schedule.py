@@ -202,7 +202,9 @@ def test_lane_permuted_plan_matches_dense():
                         step_col=plan.step_col[perm],
                         written=plan.written[perm], chunk=plan.chunk,
                         n_block_rows=plan.n_block_rows,
-                        n_real_steps=plan.n_real_steps, stats=plan.stats)
+                        n_real_steps=plan.n_real_steps, stats=plan.stats,
+                        block_m=plan.block_m, block_k=plan.block_k,
+                        fused=plan.fused)
     b = rng.standard_normal((48, 16)).astype(np.float32)
     out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16, plan=shuffled))
     np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
@@ -257,11 +259,13 @@ def test_plan_operand_mismatch_raises():
                    plan=plan_dense)
 
 
-def test_bf16_split_row_rounds_once():
-    """Lane partials stay f32 until the cross-lane sum: a split heavy row
-    rounds to bf16 once, like the naive single-accumulator walk — not once
-    per chunk."""
-    from repro.kernels.maple_spmm import maple_spmm_planned_pallas
+@pytest.mark.parametrize("fused", ["rmw", "compact"])
+def test_bf16_split_row_rounds_once(fused):
+    """Partials of a split row merge in f32 *inside the fused dataflow*:
+    a split heavy row rounds to bf16 once, like the naive
+    single-accumulator walk — not once per chunk."""
+    from repro.kernels.maple_spmm import (maple_spmm_compact_pallas,
+                                          maple_spmm_planned_pallas)
     rng = np.random.default_rng(23)
     mask = np.zeros((2, 8), bool)
     mask[0] = True                                # one heavy row
@@ -270,12 +274,22 @@ def test_bf16_split_row_rounds_once():
     a = BlockCSR.from_dense(d.astype(jnp.bfloat16), (8, 8))
     b = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32)
                     ).astype(jnp.bfloat16)
-    plan = plan_spmm(a, n_lanes=4, chunk=2)
-    # mechanism: the raw kernel emits f32 per-lane partials for bf16 in
-    lanes = maple_spmm_planned_pallas(
-        a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
-        jnp.asarray(plan.step_col), b[None], m=16, bn=16)
-    assert lanes.dtype == jnp.float32
+    plan = plan_spmm(a, n_lanes=4, chunk=2, fused=fused)
+    # mechanism: the raw fused kernels emit f32 for bf16 inputs, so the
+    # in-kernel (rmw) / scatter-add (compact) merge never rounds early
+    if fused == "rmw":
+        raw = maple_spmm_planned_pallas(
+            a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), jnp.asarray(plan.step_acc),
+            b[None], m=16, bn=16)
+        assert raw.shape == (1, 16, 16)           # merged, no lane axis
+    else:
+        raw = maple_spmm_compact_pallas(
+            a.blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
+            jnp.asarray(plan.step_col), jnp.asarray(plan.flush_slot),
+            b[None], r_max=plan.r_max, bn=16)
+        assert raw.shape == (1, plan.n_lanes, plan.r_max * 8, 16)
+    assert raw.dtype == jnp.float32
     # consequence: the split schedule matches the f32 product of the
     # bf16-quantized inputs to single-rounding accuracy
     ref = np.asarray(a.to_dense(), np.float32) @ np.asarray(b, np.float32)
