@@ -46,18 +46,29 @@ def main():
     ap.add_argument("--sparse-mlp", action="store_true",
                     help="block-sparse trainable MLP down projections "
                          "(Maple kernels fwd+bwd)")
+    ap.add_argument("--partition", type=int, default=0, metavar="D",
+                    help="shard the sparse-MLP plans over D devices "
+                         "(0 = all local devices when more than one; "
+                         "1 = force single-device).  Run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=8 to exercise the mesh path on a CPU box")
     args = ap.parse_args()
 
     cfg = lm_125m(sparse_mlp=args.sparse_mlp)
     print(f"config: {cfg.name}, params ≈ {cfg.param_count():,}")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     # one host-side symbolic pass per weight pattern: the jitted step
-    # closes over the shared fwd+bwd plan (None for dense configs)
-    mlp_plan = lm.sparse_mlp_plan(params)
+    # closes over the shared fwd+bwd plan (None for dense configs).
+    # --partition lifts both sides to the device array: each device owns
+    # an LPT share of the weight's block-rows (kernels.partition), the
+    # backward re-partitions on the transposed pattern.
+    n_shards = args.partition or len(jax.local_devices())
+    mlp_plan = lm.sparse_mlp_plan(params, n_shards=n_shards)
     if mlp_plan is not None:
         pc = mlp_plan.predicted_cycles()
         print(f"sparse mlp plan: fwd {pc['fwd_plan']:.0f} + "
-              f"A^T {pc['at_plan']:.0f} block-MACs/lane predicted")
+              f"A^T {pc['at_plan']:.0f} block-MACs/lane predicted"
+              + (f" over {n_shards} devices" if n_shards > 1 else ""))
     ocfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=5,
                            total_steps=max(args.steps, 100))
     opt = init_opt_state(ocfg, params)

@@ -1,1 +1,3 @@
 from repro.data.pipeline import DataConfig, synth_batch, data_iterator
+
+__all__ = ["DataConfig", "synth_batch", "data_iterator"]

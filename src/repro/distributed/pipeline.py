@@ -16,13 +16,12 @@ transpose = reverse ring), so `jax.grad` through `pipeline_apply` yields
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_apply(stage_fn: Callable, mesh: Mesh, n_microbatches: int,

@@ -21,6 +21,7 @@ import threading
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisNames = Union[str, Tuple[str, ...], None]
@@ -73,6 +74,7 @@ class _Ctx(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None
         self.rules: Mapping[str, Tuple[str, ...]] = DEFAULT_RULES
+        self.partition_disabled: bool = False
 
 
 _ctx = _Ctx()
@@ -113,6 +115,61 @@ def use_mesh_rules(mesh: Optional[Mesh],
 
 def active_mesh() -> Optional[Mesh]:
     return _ctx.mesh
+
+
+# --------------------------------------------------------------------------
+# partitioned-kernel mesh (the Maple PE-array axis)
+# --------------------------------------------------------------------------
+
+# mesh axis the partitioned Maple kernels shard execution plans over —
+# the device-level realization of the paper's §V spatial PE array
+PARTITION_AXIS = "shard"
+
+
+def partition_mesh(n_shards: int) -> Tuple[Optional[Mesh], Optional[str]]:
+    """Mesh for a :class:`~repro.kernels.partition.PartitionedSpmmPlan`.
+
+    Resolution order:
+
+    1. ``n_shards <= 1`` — no mesh; the executor runs the stacked shard
+       loop on one device (the planning math is identical either way);
+    2. the **bound mesh context** (``use_mesh_rules``) carries a
+       ``PARTITION_AXIS`` axis of exactly ``n_shards`` devices — reuse it,
+       so partitioned kernels compose with a larger training/serving mesh
+       that reserved a ``shard`` axis;
+    3. otherwise build a private 1-D mesh over the first ``n_shards``
+       of ``jax.local_devices()``;
+    4. fewer local devices than shards — ``(None, None)``: the executor
+       falls back to the single-device stacked loop, which computes the
+       *same* result (a plan built for 8 shards stays valid on a 1-device
+       box; tests rely on this to compare both paths bit-for-bit).
+    """
+    if n_shards <= 1 or _ctx.partition_disabled:
+        return None, None
+    ctx = _ctx.mesh
+    if ctx is not None and PARTITION_AXIS in ctx.shape \
+            and ctx.shape[PARTITION_AXIS] == n_shards:
+        return ctx, PARTITION_AXIS
+    devices = jax.local_devices()
+    if len(devices) < n_shards:
+        return None, None
+    return Mesh(np.asarray(devices[:n_shards]), (PARTITION_AXIS,)), \
+        PARTITION_AXIS
+
+
+@contextlib.contextmanager
+def local_partition_execution():
+    """Force partitioned plans onto the single-device stacked loop even
+    when a mesh is available.  The loop executes the identical per-shard
+    kernels and epilogue, so results are bit-identical to the
+    ``shard_map`` path — which is exactly what the partition tests pin by
+    running both under this switch."""
+    prev = _ctx.partition_disabled
+    _ctx.partition_disabled = True
+    try:
+        yield
+    finally:
+        _ctx.partition_disabled = prev
 
 
 def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):

@@ -1,2 +1,4 @@
 from repro.ft import checkpoint
 from repro.ft.straggler import StragglerConfig, StragglerMonitor, StepTimer
+
+__all__ = ["checkpoint", "StragglerConfig", "StragglerMonitor", "StepTimer"]

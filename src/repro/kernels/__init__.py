@@ -9,11 +9,15 @@ from repro.kernels.ops import (
     maple_spmspm,
     moe_expert_gemm,
 )
+from repro.kernels.partition import (PartitionedSpmmPlan,
+                                     plan_partitioned_spmm,
+                                     plan_partitioned_spmm_vjp)
 from repro.kernels.schedule import (ExecutionPlan, SpgemmPlan, SpmmPlan,
                                     SpmmTrainPlan, bsr_stats, plan_spgemm,
                                     plan_spmm, plan_spmm_vjp)
 
 __all__ = ["maple_spmm", "maple_spgemm", "maple_spmspm", "moe_expert_gemm",
            "csr_to_ell", "local_block_attention", "ExecutionPlan",
-           "SpmmPlan", "SpgemmPlan", "SpmmTrainPlan", "bsr_stats",
-           "plan_spmm", "plan_spgemm", "plan_spmm_vjp"]
+           "SpmmPlan", "SpgemmPlan", "SpmmTrainPlan", "PartitionedSpmmPlan",
+           "bsr_stats", "plan_spmm", "plan_spgemm", "plan_spmm_vjp",
+           "plan_partitioned_spmm", "plan_partitioned_spmm_vjp"]

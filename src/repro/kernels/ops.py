@@ -21,8 +21,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.csr import CSR, BlockCSR, grow_nnz_max
+from repro.distributed.sharding import partition_mesh
 from repro.kernels.block_attn import (block_attention_pallas,
                                       local_window_kv_map)
 from repro.kernels.maple_sddmm import (maple_sddmm_bsr_pallas,
@@ -33,6 +36,9 @@ from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
                                       maple_spmm_planned_pallas)
 from repro.kernels.maple_spmspm import maple_spmspm_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
+from repro.kernels.partition import (PartitionedSpmmPlan,
+                                     plan_partitioned_spmm,
+                                     plan_partitioned_spmm_vjp)
 from repro.kernels.schedule import (SpgemmPlan, SpmmPlan, SpmmTrainPlan,
                                     plan_spgemm, plan_spmm, plan_spmm_vjp)
 
@@ -62,8 +68,9 @@ def _pad_cols(b: jax.Array, bn: int) -> tuple[jax.Array, int]:
 
 def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                schedule: str = "balanced", n_lanes: int = 8,
-               chunk: int | None = None,
-               plan: SpmmPlan | SpmmTrainPlan | None = None,
+               chunk: int | None = None, n_shards: int | None = None,
+               plan: SpmmPlan | SpmmTrainPlan | PartitionedSpmmPlan
+               | None = None,
                interpret: bool | None = None) -> jax.Array:
     """C = A_bsr @ B with the Maple block dataflow.  Differentiable.
 
@@ -84,6 +91,14 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
       order.  Metadata stays traced, so this path always composes with
       jit; the planned schedules read the (host-static) pattern at call
       time, so under jit they require a prebuilt ``plan``.
+    * ``"partitioned"`` — block-rows LPT-split across ``n_shards``
+      devices (default: every ``jax.local_devices()``), one shard-local
+      plan each, executed with ``shard_map`` over the
+      ``distributed.sharding.partition_mesh`` axis (sparse operand and
+      plan metadata sharded, dense operand replicated, row-offset
+      epilogue reassembling the disjoint row slices — see
+      ``kernels.partition``).  With fewer devices than shards the same
+      plan runs as a stacked single-device loop, bit-identically.
 
     Pass a prebuilt ``plan`` (``kernels.schedule.plan_spmm`` or, for
     training, ``plan_spmm_vjp``) to amortize planning across calls and to
@@ -120,11 +135,30 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     """
     if interpret is None:
         interpret = _default_interpret()
-    if schedule not in ("balanced", "row_atomic", "naive"):
+    if schedule not in ("balanced", "row_atomic", "naive", "partitioned"):
         raise ValueError(f"unknown schedule {schedule!r}")
     if schedule == "naive" and plan is not None:
         raise ValueError("schedule='naive' does not execute a plan; "
                          "drop `plan` or pick a planned schedule")
+    if n_shards is not None:
+        # n_shards must never be silently ignored: with a prebuilt plan it
+        # is a cross-check against the plan's own shard count, without one
+        # it only means something on the partitioned schedule
+        got = plan.fwd if isinstance(plan, SpmmTrainPlan) else plan
+        if got is not None:
+            if not isinstance(got, PartitionedSpmmPlan):
+                raise ValueError(
+                    "n_shards was given but the prebuilt plan is "
+                    "single-device — build it with plan_partitioned_spmm "
+                    "/ plan_spmm_vjp(n_shards=...) instead")
+            if got.n_shards != n_shards:
+                raise ValueError(
+                    f"n_shards={n_shards} but the prebuilt plan has "
+                    f"{got.n_shards} shards")
+        elif schedule != "partitioned":
+            raise ValueError("n_shards only applies to "
+                             "schedule='partitioned' (or pass a prebuilt "
+                             "PartitionedSpmmPlan)")
     if b_dense.ndim not in (2, 3):
         raise ValueError(f"B must be (K, N) or (G, K, N), got {b_dense.shape}")
     if b_dense.shape[-2] != a.shape[1]:
@@ -151,7 +185,14 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
             raise ValueError(
                 f"plan is for {plan.n_block_rows} block-rows, "
                 f"operand has {a.n_block_rows}")
-        if plan.order.size and int(plan.order.max()) >= a.n_blocks_max:
+        if isinstance(plan, PartitionedSpmmPlan):
+            # order indexes shard-local slots; the global capacity bound
+            # lives on the payload gather map instead
+            if plan.gather_live.any() and \
+                    int(plan.gather[plan.gather_live].max()) >= a.n_blocks_max:
+                raise ValueError("plan gathers blocks beyond the operand's "
+                                 "capacity — was it built for this weight?")
+        elif plan.order.size and int(plan.order.max()) >= a.n_blocks_max:
             raise ValueError("plan indexes blocks beyond the operand's "
                              "capacity — was it built for this weight?")
         if (plan.block_m, plan.block_k) != a.block_shape:
@@ -159,6 +200,11 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                 f"plan was built for blocks "
                 f"({plan.block_m}, {plan.block_k}), operand blocks are "
                 f"{a.block_shape} — was it built for this weight?")
+    if plan is None and schedule == "partitioned":
+        shards = n_shards if n_shards is not None \
+            else max(len(jax.local_devices()), 1)
+        plan = plan_partitioned_spmm(a, n_shards=shards, n_lanes=n_lanes,
+                                     chunk=chunk)
     if plan is None and schedule != "naive":
         # the fused kernels never materialize the full per-lane buffer
         # (rmw: none at all; compact: written-map-sized tiles), so auto
@@ -176,6 +222,15 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
         train_thunk = lambda t=train: t
     elif traced_meta:
         train_thunk = None          # jnp fallback backward (naive only)
+    elif isinstance(plan, PartitionedSpmmPlan):
+        memo = []
+
+        def train_thunk(a=a, fwd=plan, lanes=n_lanes, chunk=chunk):
+            if not memo:
+                memo.append(plan_partitioned_spmm_vjp(
+                    a, n_shards=fwd.n_shards, n_lanes=lanes, chunk=chunk,
+                    fwd=fwd))
+            return memo[0]
     else:
         memo = []
 
@@ -190,6 +245,79 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                      interpret=interpret)
     out = out[..., :n_orig]
     return out if batched else out[0]
+
+
+def _scatter_merge_f32(tiles, slot_row, *, gm: int, bm: int) -> jax.Array:
+    """Compact-flush merge shared by the single-device compact path and
+    the partitioned row-offset epilogue: scatter ``(G, n_slots, bm, N)``
+    flush tiles into their block-rows in f32.  Dead slots
+    (``slot_row < 0``) target a sacrificial block-row that is sliced off;
+    duplicate row targets are split rows (within a lane pool, or across
+    devices), merged at accumulator precision so they round once."""
+    g, _, _, n = tiles.shape
+    rows = np.where(slot_row < 0, gm, slot_row).reshape(-1)
+    merged = jnp.zeros((g, gm + 1, bm, n), jnp.float32)
+    merged = merged.at[:, jnp.asarray(rows)].add(tiles)
+    return merged[:, :gm].reshape(g, gm * bm, n)
+
+
+def _partitioned_spmm_f32(blocks, b3, plan: PartitionedSpmmPlan, *,
+                          bn: int, interpret: bool) -> jax.Array:
+    """Mesh-partitioned planned SpMM → merged ``(G, m, N)`` **f32**.
+
+    Every shard runs the existing compact kernel on its own row slice:
+    payload (gathered per-shard blocks) and plan metadata are sharded
+    along the leading device axis, the dense operand is replicated, and
+    the compact flush tiles come back device-stacked.  The row-offset
+    epilogue then scatters each shard's ``slot_row`` slots into its rows
+    of the global output — rows are disjoint across shards by default,
+    so the merge is a plain placement; only split-row boundary slots
+    (``plan.split_rows``) actually accumulate, in f32, inside the same
+    scatter-add.
+
+    Mesh resolution is ``distributed.sharding.partition_mesh``: with a
+    live mesh the shard loop is a ``shard_map``; without one (fewer
+    devices than shards) the same per-shard computation runs as a stacked
+    loop on one device — bit-identical, because both paths execute the
+    identical per-shard kernel and the identical epilogue.
+    """
+    d_, cap = plan.gather.shape
+    bm = plan.block_m
+    gm = plan.n_block_rows
+    gat = jnp.asarray(plan.gather)                    # (D, cap)
+    live = jnp.asarray(plan.gather_live)
+    shard_blocks = jnp.where(live[..., None, None], blocks[gat], 0)
+    order = jnp.asarray(plan.order)
+    row = jnp.asarray(plan.step_row)
+    col = jnp.asarray(plan.step_col)
+    slot = jnp.asarray(plan.flush_slot)
+
+    def one_shard(blk, o, r, c, f, bb):
+        return maple_spmm_compact_pallas(
+            blk, o, r, c, f, bb, r_max=plan.r_max, bn=bn,
+            interpret=interpret)                      # (G, L, r_max*bm, N)
+
+    mesh, axis = partition_mesh(d_)
+    if mesh is not None:
+        shard_fn = shard_map(
+            lambda blk, o, r, c, f, bb:
+                one_shard(blk[0], o[0], r[0], c[0], f[0], bb)[None],
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis), check_rep=False)
+        tiles = shard_fn(shard_blocks, order, row, col, slot, b3)
+    else:
+        tiles = jnp.stack([
+            one_shard(shard_blocks[d], order[d], row[d], col[d], slot[d],
+                      b3)
+            for d in range(d_)])                      # (D, G, L, r_max*bm, N)
+
+    g, n = b3.shape[0], b3.shape[-1]
+    tiles = jnp.moveaxis(tiles, 1, 0)                 # (G, D, L, r_max*bm, N)
+    tiles = tiles.reshape(g, d_ * plan.n_lanes * plan.r_max, bm, n)
+    # row-offset epilogue: duplicate row targets exist only for split-row
+    # boundary slots
+    return _scatter_merge_f32(tiles, plan.slot_row, gm=gm, bm=bm)
 
 
 def _planned_spmm_f32(blocks, b3, plan: SpmmPlan, *, bn: int,
@@ -209,7 +337,14 @@ def _planned_spmm_f32(blocks, b3, plan: SpmmPlan, *, bn: int,
     compact path, forward and backward alike (no layout can mismatch
     between the two passes of one VJP).  Plan arrays become device
     constants *here*, inside the custom_vjp bodies that call this — see
-    the grad-of-jit note in :func:`_spgemm_value_call`."""
+    the grad-of-jit note in :func:`_spgemm_value_call`.
+
+    A :class:`PartitionedSpmmPlan` dispatches to the mesh-partitioned
+    executor — same contract (merged f32 output, geometry authoritative
+    on the plan), forward and transpose-side (bwd) pass alike."""
+    if isinstance(plan, PartitionedSpmmPlan):
+        return _partitioned_spmm_f32(blocks, b3, plan, bn=bn,
+                                     interpret=interpret)
     bm = plan.block_m
     m = plan.n_block_rows * bm
     if plan.fused == "compact" or not interpret:
@@ -218,15 +353,11 @@ def _planned_spmm_f32(blocks, b3, plan: SpmmPlan, *, bn: int,
             jnp.asarray(plan.step_col), jnp.asarray(plan.flush_slot),
             b3, r_max=plan.r_max, bn=bn, interpret=interpret)
         g, n = b3.shape[0], b3.shape[-1]
-        gm = plan.n_block_rows
         tiles = tiles.reshape(g, plan.n_lanes * plan.r_max, bm, n)
         # dead slots were never flushed (their contents are undefined) —
-        # scatter them into a sacrificial block-row and slice it off;
-        # duplicate slot targets are the split rows, merged here in f32
-        slot_row = np.where(plan.slot_row < 0, gm, plan.slot_row)
-        merged = jnp.zeros((g, gm + 1, bm, n), jnp.float32)
-        merged = merged.at[:, jnp.asarray(slot_row.reshape(-1))].add(tiles)
-        return merged[:, :gm].reshape(g, m, n)
+        # the shared merge scatters them into the sacrificial row
+        return _scatter_merge_f32(tiles, plan.slot_row,
+                                  gm=plan.n_block_rows, bm=bm)
     out = maple_spmm_planned_pallas(
         blocks, jnp.asarray(plan.order), jnp.asarray(plan.step_row),
         jnp.asarray(plan.step_col), jnp.asarray(plan.step_acc),

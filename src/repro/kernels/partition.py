@@ -1,0 +1,303 @@
+"""Mesh-partitioned SpMM planning: shard a ``BlockCSR``'s block-rows
+across devices, one :class:`~repro.kernels.schedule.SpmmPlan` per shard.
+
+The per-PE schedule (``kernels.schedule``) is only half of the paper's
+design: §V replicates the Maple PE across a spatial array and distributes
+row-wise work over the replicas.  This module is that second layer,
+expressed at the granularity JAX gives us — *devices* stand in for PE
+columns, and the unit of distributed work is a **block-row** (or a
+bounded chunk of one, for the heavy-row boundary case):
+
+1. block-rows are LPT-packed across ``n_shards`` devices by their block
+   count (the same ``(2 - 1/L)×``-optimal greedy — and literally the same
+   ``_lpt_pack`` — the lane scheduler uses one level down);
+2. each device's row slice becomes a shard-local **sub-pattern** (global
+   row ids, locally compacted block slots) and gets its own ``SpmmPlan``
+   with the usual lane/chunk knobs — so every shard runs the *existing*
+   fused compact kernel, unchanged;
+3. the shard plans are padded to a common geometry (steps, ``r_max``,
+   slot capacity) and stacked along a leading device axis, which is what
+   ``shard_map`` shards: plan metadata and gathered payload travel
+   together, the dense operand stays replicated;
+4. shard outputs are compact flush tiles; a **row-offset epilogue**
+   scatters each shard's slots into its rows of the global output.  Rows
+   live on exactly one device by default, so the merge needs no psum —
+   only when ``device_chunk`` splits a heavy row across devices do two
+   shards contribute f32 partials to the same row (the split-row
+   boundary case), and the scatter-*add* handles that in the same pass.
+
+Like every plan here, construction is host-side numpy over static
+metadata: build once per weight pattern, close jitted calls over it.
+Execution lives in ``kernels.ops`` (``maple_spmm(schedule="partitioned")``
+or ``plan=`` a :class:`PartitionedSpmmPlan`); the mesh comes from
+``distributed.sharding.partition_mesh``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.csr import BlockCSR
+from repro.core.maple import (SpGEMMStats, baseline_pe_cycles,
+                              maple_pe_cycles)
+from repro.kernels.schedule import (SpmmPlan, _lpt_pack, bsr_stats,
+                                    plan_spmm)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedSpmmPlan:
+    """A stack of shard-local :class:`SpmmPlan` s plus the maps that shard
+    the operand and reassemble the output.
+
+    All arrays are host numpy with a leading device axis ``D``; the stacked
+    plan arrays share one geometry (``n_lanes`` lanes, ``steps`` steps,
+    ``r_max`` flush slots, ``slot_cap`` payload slots), padded per the
+    container/pad-step conventions so every shard executes the *same*
+    ``pallas_call`` shapes — the SPMD requirement of ``shard_map``.
+
+    * ``gather[d, t]`` / ``gather_live[d, t]`` — global ``a.blocks`` slot
+      backing shard ``d``'s local slot ``t`` (0 / False where dead): the
+      payload side of the partition, applied as a traced gather so the
+      sharded blocks follow the traced weight;
+    * ``order`` / ``step_row`` / ``step_col`` / ``flush_slot`` —
+      ``(D, L, S)`` stacked lane schedules.  ``order`` indexes shard-local
+      slots; ``step_row`` keeps **global** block-row ids (run-boundary
+      detection only compares neighbours, so global ids cost nothing and
+      keep the bookkeeping single-sourced);
+    * ``slot_row[d, l, t]`` — global block-row that shard ``d``'s lane
+      ``l`` flushes into compact slot ``t`` (``-1`` dead): the row-offset
+      epilogue's scatter map;
+    * ``row_shard`` — ``(gm,)`` primary owner device per block-row (``-1``
+      for empty rows); ``split_rows`` lists rows owned by more than one
+      device (non-empty only when ``device_chunk`` split a heavy row —
+      the only rows whose merge actually accumulates).
+
+    ``shards`` keeps the unpadded per-shard plans for inspection
+    (``predicted_cycles`` per device, tests).
+    """
+
+    shards: Tuple[SpmmPlan, ...]
+    gather: np.ndarray        # (D, slot_cap) int32
+    gather_live: np.ndarray   # (D, slot_cap) bool
+    order: np.ndarray         # (D, L, S) int32, shard-local slots
+    step_row: np.ndarray      # (D, L, S) int32, global block-rows
+    step_col: np.ndarray      # (D, L, S) int32, -1 pads
+    flush_slot: np.ndarray    # (D, L, S) int32
+    slot_row: np.ndarray      # (D, L, r_max) int32, -1 dead
+    row_shard: np.ndarray     # (gm,) int32, -1 empty
+    split_rows: Tuple[int, ...]
+    r_max: int
+    n_block_rows: int
+    block_m: int
+    block_k: int
+    stats: SpGEMMStats        # global workload stats (one source of truth)
+
+    # partitioned execution is compact-layout by definition: shard outputs
+    # must be disjoint per-device tiles; the rmw read-modify-write of a
+    # shared output tile cannot cross devices
+    fused: str = dataclasses.field(default="compact", init=False)
+
+    @property
+    def n_shards(self) -> int:
+        return self.gather.shape[0]
+
+    @property
+    def n_lanes(self) -> int:
+        return self.order.shape[1]
+
+    @property
+    def steps(self) -> int:
+        return self.order.shape[2]
+
+    @property
+    def slot_cap(self) -> int:
+        return self.gather.shape[1]
+
+    def per_shard_cycles(self) -> List[float]:
+        """Each device's realized lane makespan (the per-device predicted
+        cycles the benchmark prints)."""
+        return [p.predicted_cycles()["plan"] for p in self.shards]
+
+    def predicted_cycles(self) -> Dict[str, float]:
+        """Same keys as :meth:`ExecutionPlan.predicted_cycles`, lifted to
+        the device array: ``plan`` is the slowest shard's makespan (the
+        array drains when its last device does), ``maple`` prices
+        ``n_shards`` PEs of ``n_lanes`` MACs with the shared analytical
+        model, ``row_atomic`` pins rows to the full lane pool."""
+        return {
+            "plan": float(max(self.per_shard_cycles(), default=1.0)),
+            "maple": maple_pe_cycles(self.stats, macs_per_pe=self.n_lanes,
+                                     n_pes=self.n_shards),
+            "row_atomic": baseline_pe_cycles(
+                self.stats, n_pes=self.n_lanes * self.n_shards),
+        }
+
+
+def _shard_pattern(a: BlockCSR, items: List[Tuple[int, int, int]],
+                   slot_cap: int) -> Tuple[BlockCSR, np.ndarray, np.ndarray]:
+    """One device's row slice as a metadata-only BlockCSR sub-pattern.
+
+    ``items`` are ``(row, lo, hi)`` global block ranges owned by this
+    device, already sorted by ``(row, lo)``.  Rows keep their **global**
+    indices (the sub-pattern spans all ``gm`` rows; unowned rows are
+    empty), blocks are compacted to local slots ``0..n_local-1`` in item
+    order.  Returns ``(pattern, gather, live)`` where ``gather`` maps
+    local slot → global slot under the container pad contract.
+    """
+    gm = a.n_block_rows
+    cols = np.asarray(a.block_col).astype(np.int32)
+    gather = np.zeros(slot_cap, np.int32)
+    live = np.zeros(slot_cap, bool)
+    block_col = np.full(slot_cap, -1, np.int32)
+    block_row = np.full(slot_cap, max(gm - 1, 0), np.int32)
+    counts = np.zeros(gm, np.int64)
+    t = 0
+    for (row, lo, hi) in items:
+        ln = hi - lo
+        gather[t:t + ln] = np.arange(lo, hi, dtype=np.int32)
+        live[t:t + ln] = True
+        block_col[t:t + ln] = cols[lo:hi]
+        block_row[t:t + ln] = row
+        counts[row] += ln
+        t += ln
+    row_ptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    pattern = BlockCSR(
+        blocks=np.zeros((slot_cap, 1, 1), np.float32),  # metadata-only
+        block_col=block_col, block_row=block_row, row_ptr=row_ptr,
+        shape=a.shape, block_shape=a.block_shape)
+    return pattern, gather, live
+
+
+def plan_partitioned_spmm(a: BlockCSR, *, n_shards: int,
+                          n_lanes: int = 8,
+                          chunk: Optional[int] = None,
+                          device_chunk: Optional[int] = None,
+                          row_atomic: bool = False) -> PartitionedSpmmPlan:
+    """Partition ``a``'s block-rows across ``n_shards`` devices and plan
+    each shard with the existing lane scheduler.
+
+    ``device_chunk`` bounds the largest *device-level* work item: ``None``
+    keeps block-rows whole (every row on exactly one device — the no-psum
+    default), an integer splits rows heavier than that many blocks into
+    chunks that may land on different devices (the split-row boundary
+    case; the epilogue's scatter-add merges their f32 partials).
+    ``n_lanes`` / ``chunk`` / ``row_atomic`` are the per-shard lane knobs,
+    passed straight to :func:`plan_spmm`.
+
+    Host-side over metadata; raises on traced metadata like every planner.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} < 1")
+    if device_chunk is not None and device_chunk < 1:
+        raise ValueError(f"device_chunk={device_chunk} < 1")
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    gm = a.n_block_rows
+
+    # 1. device-level work items: whole rows, or bounded chunks of them
+    items: List[Tuple[int, int, int]] = []
+    for i in range(gm):
+        lo, hi = int(rptr[i]), int(rptr[i + 1])
+        if hi <= lo:
+            continue
+        if device_chunk is None:
+            items.append((i, lo, hi))
+        else:
+            for s in range(lo, hi, device_chunk):
+                items.append((i, s, min(s + device_chunk, hi)))
+
+    # 2. LPT across devices — longest item first onto the lightest device
+    items.sort(key=lambda c: (-(c[2] - c[1]), c[0], c[1]))
+    device_items, _ = _lpt_pack([(c[2] - c[1], c) for c in items], n_shards)
+    for lane in device_items:
+        lane.sort(key=lambda c: (c[0], c[1]))
+
+    # 3. shard-local sub-patterns + plans (common slot capacity)
+    slot_cap = max(max((sum(c[2] - c[1] for c in d) for d in device_items),
+                       default=0), 1)
+    shards: List[SpmmPlan] = []
+    gathers, lives = [], []
+    for d in range(n_shards):
+        pattern, gather, live = _shard_pattern(a, device_items[d], slot_cap)
+        shards.append(plan_spmm(pattern, n_lanes=n_lanes, chunk=chunk,
+                                row_atomic=row_atomic, fused="compact"))
+        gathers.append(gather)
+        lives.append(live)
+
+    # 4. pad shard plans to one SPMD geometry and stack on the device axis
+    steps = max(p.steps for p in shards)
+    r_max = max(p.r_max for p in shards)
+
+    def pad_steps(arr: np.ndarray, *, fill=None) -> np.ndarray:
+        # fill=None extends each lane's last column (pad steps prolong the
+        # lane's final run: same row, same flush slot — the plan-internal
+        # pad convention, applied once more at the stack boundary)
+        l, s0 = arr.shape
+        if s0 == steps:
+            return arr.astype(np.int32)
+        out = np.empty((l, steps), np.int32)
+        out[:, :s0] = arr
+        out[:, s0:] = arr[:, -1:] if fill is None else fill
+        return out
+
+    order = np.stack([pad_steps(p.order, fill=0) for p in shards])
+    step_row = np.stack([pad_steps(p.step_row) for p in shards])
+    step_col = np.stack([pad_steps(p.step_col, fill=-1) for p in shards])
+    flush_slot = np.stack([pad_steps(p.flush_slot) for p in shards])
+    slot_row = np.full((n_shards, n_lanes, r_max), -1, np.int32)
+    for d, p in enumerate(shards):
+        slot_row[d, :, :p.r_max] = p.slot_row
+
+    # 5. ownership bookkeeping (tests + the no-psum claim)
+    row_shard = np.full(gm, -1, np.int32)
+    owners: Dict[int, set] = {}
+    for d, dev in enumerate(device_items):
+        for (row, _, _) in dev:
+            owners.setdefault(row, set()).add(d)
+    for row, ds in owners.items():
+        row_shard[row] = min(ds)
+    split = tuple(sorted(r for r, ds in owners.items() if len(ds) > 1))
+
+    return PartitionedSpmmPlan(
+        shards=tuple(shards),
+        gather=np.stack(gathers), gather_live=np.stack(lives),
+        order=order, step_row=step_row, step_col=step_col,
+        flush_slot=flush_slot, slot_row=slot_row,
+        row_shard=row_shard, split_rows=split, r_max=r_max,
+        n_block_rows=gm, block_m=a.block_shape[0], block_k=a.block_shape[1],
+        stats=bsr_stats(a))
+
+
+def plan_partitioned_spmm_vjp(a: BlockCSR, *, n_shards: int,
+                              n_lanes: int = 8,
+                              chunk: Optional[int] = None,
+                              device_chunk: Optional[int] = None,
+                              row_atomic: bool = False,
+                              fwd: Optional[PartitionedSpmmPlan] = None):
+    """Partitioned forward plan + re-partitioned transpose-side plan.
+
+    Returns a :class:`~repro.kernels.schedule.SpmmTrainPlan` whose ``fwd``
+    and ``bwd`` are :class:`PartitionedSpmmPlan` s — the ``dB = A^T @ dC``
+    backward **re-partitions on the transposed block pattern** (A^T's
+    block-rows are A's block-columns, so the forward's row split is
+    useless there; the transpose side runs its own LPT over A^T rows).
+    The dA block SDDMM stays single-device for now (it is
+    pattern-gathered, not row-partitioned — see ROADMAP open items).
+    Everything else (payload transpose gather, SDDMM metadata) rides the
+    shared :func:`~repro.kernels.schedule.transpose_train_plan` tail, so
+    the transpose-side conventions cannot drift from ``plan_spmm_vjp``.
+    """
+    from repro.kernels.schedule import transpose_train_plan
+
+    if fwd is None:
+        fwd = plan_partitioned_spmm(a, n_shards=n_shards, n_lanes=n_lanes,
+                                    chunk=chunk, device_chunk=device_chunk,
+                                    row_atomic=row_atomic)
+    return transpose_train_plan(
+        a, fwd,
+        lambda at: plan_partitioned_spmm(
+            at, n_shards=n_shards, n_lanes=n_lanes, chunk=chunk,
+            device_chunk=device_chunk, row_atomic=row_atomic))

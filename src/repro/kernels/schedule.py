@@ -275,10 +275,14 @@ class SpmmPlan(ExecutionPlan):
                              mode: Optional[str] = None) -> int:
         """Output-side HBM bytes the dataflow moves (model estimate).
 
-        ``mode`` defaults to the plan's ``fused`` layout; ``"epilogue"``
-        prices the *retired* full lane-buffer path for trajectory
-        comparisons (write + re-read of ``(G, L, M, N)`` plus the merged
-        result) — it is not executable anymore, only priced.
+        ``mode`` defaults to the plan's ``fused`` layout.
+        ``"legacy_epilogue"`` prices the *retired* full lane-buffer path
+        for trajectory comparisons (write + re-read of ``(G, L, M, N)``
+        plus the merged result) — it is not executable anymore, only
+        priced, and the ``legacy_`` prefix is load-bearing: benchmark
+        records derived from it carry the same prefix so the ``--check``
+        regression gate can never mistake the dead mode for a live
+        dataflow.  The old ``"epilogue"`` spelling raises, pointing here.
         """
         mode = mode or self.fused
         bm = self.block_m
@@ -296,9 +300,14 @@ class SpmmPlan(ExecutionPlan):
         if mode == "compact":
             buf = g * self.n_lanes * self.r_max * bm * n_cols * itemsize
             return 2 * buf + final
-        if mode == "epilogue":
+        if mode == "legacy_epilogue":
             buf = g * self.n_lanes * m * n_cols * itemsize
             return 2 * buf + final
+        if mode == "epilogue":
+            raise ValueError(
+                "the 'epilogue' dataflow was deleted; to price the "
+                "retired lane-buffer path for trajectory comparison, ask "
+                "for mode='legacy_epilogue' explicitly")
         raise ValueError(f"unknown traffic mode {mode!r}")
 
 
@@ -459,6 +468,7 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
                   chunk: Optional[int] = None,
                   row_atomic: bool = False,
                   fused: str = "auto",
+                  n_shards: Optional[int] = None,
                   fwd: Optional[SpmmPlan] = None) -> SpmmTrainPlan:
     """Build the forward plan and cache the transpose-side plan with it.
 
@@ -469,28 +479,59 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
     back to a jnp backward).  Pass an already-built ``fwd`` plan for the
     same operand to skip re-planning the forward (``n_lanes``/``chunk``/
     ``row_atomic`` then only shape the transpose-side schedule).
+
+    ``n_shards`` lifts both sides to the device array: the forward and
+    the ``dB = A^T @ dC`` backward become mesh-partitioned plans, the
+    backward **re-partitioned on the transposed block pattern**
+    (``kernels.partition.plan_partitioned_spmm_vjp`` — A^T's block-rows
+    are A's block-columns, so the forward's row split does not carry
+    over).  ``None``/``1`` keeps the single-device schedules.
     """
+    if n_shards is not None and n_shards > 1:
+        # lazy import: partition builds on this module
+        from repro.kernels.partition import (PartitionedSpmmPlan,
+                                             plan_partitioned_spmm_vjp)
+        if fwd is not None and not isinstance(fwd, PartitionedSpmmPlan):
+            # never silently drop the caller's plan (and its knobs)
+            raise ValueError(
+                "n_shards>1 needs a partitioned fwd plan; the one passed "
+                "is single-device — build it with plan_partitioned_spmm, "
+                "or drop fwd to re-plan here")
+        return plan_partitioned_spmm_vjp(a, n_shards=n_shards,
+                                         n_lanes=n_lanes, chunk=chunk,
+                                         row_atomic=row_atomic, fwd=fwd)
     if fwd is None:
         fwd = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
                         row_atomic=row_atomic, fused=fused)
+    return transpose_train_plan(
+        a, fwd, lambda at: plan_spmm(at, n_lanes=n_lanes, chunk=chunk,
+                                     row_atomic=row_atomic, fused=fused))
+
+
+def transpose_train_plan(a: BlockCSR, fwd, plan_at) -> SpmmTrainPlan:
+    """Shared tail of the train-plan builders (single-device *and*
+    partitioned — ``kernels.partition`` calls this too): A^T metadata at
+    the source capacity, the metadata-only A^T stand-in handed to the
+    ``plan_at`` planner, and the assembled :class:`SpmmTrainPlan`.  The
+    ONE place the transpose-side conventions are encoded, so the two
+    builders cannot drift.
+
+    The pad convention for the transposed metadata itself lives in
+    ``core.csr.bsr_transpose_meta(pad_to=...)`` — shared with
+    ``bsr_transpose``; the stand-in's ``(cap, 1, 1)`` zero payload keeps
+    plan construction O(metadata).
+    """
     cap = a.n_blocks_max
     bm, bk = a.block_shape
-    # the pad convention for the transposed metadata lives in ONE place:
-    # core.csr.bsr_transpose_meta(pad_to=...) — shared with bsr_transpose
     perm, t_block_row, t_block_col, t_rptr, nnzb = bsr_transpose_meta(
         a, pad_to=cap)
-    perm = perm[:nnzb]
-    # metadata-only stand-in for A^T: plan construction never touches the
-    # payload, so a (cap, 1, 1) zero keeps it O(metadata)
     at_pattern = BlockCSR(
         blocks=np.zeros((cap, 1, 1), np.float32),
         block_col=t_block_col, block_row=t_block_row,
         row_ptr=t_rptr, shape=(a.shape[1], a.shape[0]),
         block_shape=(bk, bm))
-    bwd = plan_spmm(at_pattern, n_lanes=n_lanes, chunk=chunk,
-                    row_atomic=row_atomic, fused=fused)
     return SpmmTrainPlan(
-        fwd=fwd, bwd=bwd, t_perm=perm,
+        fwd=fwd, bwd=plan_at(at_pattern), t_perm=perm[:nnzb],
         t_block_row=t_block_row, t_block_col=t_block_col, t_row_ptr=t_rptr,
         block_row=np.asarray(a.block_row).astype(np.int32).copy(),
         block_col=np.asarray(a.block_col).astype(np.int32).copy(),

@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.ft import checkpoint as ckpt

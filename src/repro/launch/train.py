@@ -14,10 +14,8 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data import DataConfig, synth_batch

@@ -600,6 +600,12 @@ def sparse_linear(w: BlockCSR, x, *, plan=None, bn: int = 128,
     differentiable w.r.t. both ``w``'s payload and ``x`` through
     ``maple_spmm``'s custom VJP (A^T pass + block SDDMM; see
     ``kernels/README.md``).
+
+    Multi-device: a ``PartitionedSpmmPlan`` (``plan_partitioned_spmm``,
+    or ``plan_spmm_vjp(..., n_shards=D)`` for training) runs the layer
+    sharded over ``D`` devices — each device owns a slice of ``W``'s
+    block-rows (= output features) under ``shard_map``; activations stay
+    replicated.  ``schedule="partitioned"`` does the same eagerly.
     """
     from repro.kernels import maple_spmm  # local: keep layers importable
     # without pulling pallas in for dense-only models

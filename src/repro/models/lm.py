@@ -15,9 +15,8 @@ Entry points:
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -208,7 +207,8 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
     return params
 
 
-def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None):
+def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
+                    n_shards=None):
     """Build the shared ``SpmmTrainPlan`` for a sparse-MLP model.
 
     Every sparse layer shares the mask (``cfg.sparse_mask_seed``), so one
@@ -217,6 +217,11 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None):
     metadata walk: call it once on concrete params (outside jit) and close
     the jitted train step over the result.  Returns ``None`` when the tree
     holds no sparse weight (dense configs pass through).
+
+    ``n_shards > 1`` makes both sides mesh-partitioned (one shard of
+    block-rows per device; the backward re-partitions on the transposed
+    pattern) so the train step runs the sparse layers multi-device —
+    pass ``len(jax.local_devices())`` to use every local device.
     """
     from repro.core.csr import BlockCSR
     from repro.kernels.schedule import plan_spmm_vjp
@@ -229,7 +234,8 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None):
     w = weights[0]
     if w.blocks.ndim == 4:          # stacked over layers: take layer 0
         w = jax.tree_util.tree_map(lambda a: a[0], w)
-    return plan_spmm_vjp(w, n_lanes=n_lanes, chunk=chunk)
+    return plan_spmm_vjp(w, n_lanes=n_lanes, chunk=chunk,
+                         n_shards=n_shards)
 
 
 # --------------------------------------------------------------------------

@@ -16,7 +16,6 @@ the EP all-to-all/all-gather pattern.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

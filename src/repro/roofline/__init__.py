@@ -1,1 +1,3 @@
 from repro.roofline import analysis
+
+__all__ = ["analysis"]

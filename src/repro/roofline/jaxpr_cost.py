@@ -19,13 +19,11 @@ ops, not MXU); dots dominate every model here anyway.
 
 from __future__ import annotations
 
-import math
 from functools import reduce
 from typing import Any, Dict
 
 import jax
 import numpy as np
-from jax import core
 
 
 def _nelems(aval) -> int:

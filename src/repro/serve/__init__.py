@@ -1,1 +1,4 @@
-from repro.serve.engine import SamplingConfig, generate, sample_token
+from repro.serve.engine import (SamplingConfig, SparseLogitHead, generate,
+                                sample_token)
+
+__all__ = ["SamplingConfig", "SparseLogitHead", "generate", "sample_token"]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.csr import BlockCSR
+from repro.kernels.partition import (PartitionedSpmmPlan,
+                                     plan_partitioned_spmm)
 from repro.kernels.schedule import (SpmmPlan, SpmmTrainPlan, plan_spmm,
                                     plan_spmm_vjp)
 from repro.models import lm
@@ -37,21 +39,35 @@ class SparseLogitHead:
     the forward one (``plan_spmm_vjp``), so the same head object serves
     *and* backpropagates under jit — e.g. logit-distillation fine-tuning
     against the serving head without replanning.
+
+    ``build(n_shards=D)`` partitions the head's block-rows across ``D``
+    devices (``kernels.partition``): each device scores its vocabulary
+    slice with a shard-local plan under ``shard_map``, and the row-offset
+    epilogue reassembles the logits — the §V PE-array scaling story
+    applied to the widest matmul serving runs.  Pass
+    ``len(jax.local_devices())`` to use every local device; the same
+    head still works on a 1-device box (stacked loop, identical result).
     """
 
     weight: BlockCSR         # (vocab, d_model) block-sparse
-    plan: SpmmPlan | SpmmTrainPlan
+    plan: SpmmPlan | SpmmTrainPlan | PartitionedSpmmPlan
 
     @classmethod
     def build(cls, weight: BlockCSR, *, n_lanes: int = 8,
-              chunk: int | None = None,
+              chunk: int | None = None, n_shards: int | None = None,
               trainable: bool = False) -> "SparseLogitHead":
-        planner = plan_spmm_vjp if trainable else plan_spmm
-        return cls(weight=weight,
-                   plan=planner(weight, n_lanes=n_lanes, chunk=chunk))
+        if trainable:
+            plan = plan_spmm_vjp(weight, n_lanes=n_lanes, chunk=chunk,
+                                 n_shards=n_shards)
+        elif n_shards is not None and n_shards > 1:
+            plan = plan_partitioned_spmm(weight, n_shards=n_shards,
+                                         n_lanes=n_lanes, chunk=chunk)
+        else:
+            plan = plan_spmm(weight, n_lanes=n_lanes, chunk=chunk)
+        return cls(weight=weight, plan=plan)
 
     @property
-    def _fwd_plan(self) -> SpmmPlan:
+    def _fwd_plan(self) -> SpmmPlan | PartitionedSpmmPlan:
         return (self.plan.fwd if isinstance(self.plan, SpmmTrainPlan)
                 else self.plan)
 

@@ -1,2 +1,6 @@
-from repro.train.optimizer import OptimizerConfig, OptState, init_opt_state, apply_updates, lr_at, global_norm
+from repro.train.optimizer import (OptimizerConfig, OptState, apply_updates,
+                                   global_norm, init_opt_state, lr_at)
 from repro.train.train_step import make_train_step
+
+__all__ = ["OptimizerConfig", "OptState", "init_opt_state", "apply_updates",
+           "lr_at", "global_norm", "make_train_step"]

@@ -10,7 +10,7 @@ logical-axis parameter shardings apply verbatim to the moments — FSDP
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

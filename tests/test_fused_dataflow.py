@@ -221,7 +221,37 @@ def test_plan_fused_metadata_invariants():
         np.testing.assert_array_equal(
             plan.row_mask, np.repeat(plan.written.any(axis=0), BM))
         # traffic model: fused output footprints undercut the retired
-        # lane-buffer epilogue
+        # lane-buffer epilogue, which is priced only under its explicit
+        # legacy name — the old spelling raises so a stale comparison
+        # cannot silently treat the dead mode as live
         for mode in ("rmw", "compact"):
             assert plan.output_traffic_bytes(G, N, mode=mode) < \
-                plan.output_traffic_bytes(G, N, mode="epilogue")
+                plan.output_traffic_bytes(G, N, mode="legacy_epilogue")
+        with pytest.raises(ValueError, match="legacy_epilogue"):
+            plan.output_traffic_bytes(G, N, mode="epilogue")
+
+
+@pytest.mark.parametrize("fused", ["rmw", "compact"])
+def test_multi_jtile_output_grid(fused):
+    """bn < N (two output-column tiles): the per-(g, j) PSB re-zeroing
+    and the rmw step_acc protocol across j-tile revisits are exercised —
+    everything else in this file runs bn == N, where the j axis is 1."""
+    d, a, _ = _operands(seed=41)
+    rng = np.random.default_rng(42)
+    b3 = jnp.asarray(rng.standard_normal((G, K, 2 * N)).astype(np.float32))
+    plan = plan_spmm(a, n_lanes=LANES, chunk=2, fused=fused)
+    out = np.asarray(maple_spmm(a, b3, bn=N, plan=plan))   # n//bn == 2
+    expect = np.einsum("mk,gkn->gmn", d, np.asarray(b3))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+    # fwd + grad, jit and eager, stay bit-identical across the j grid
+    tp = plan_spmm_vjp(a, n_lanes=LANES, chunk=2, fused=fused)
+
+    def loss(blocks, bb):
+        aa = BlockCSR(blocks, a.block_col, a.block_row, a.row_ptr,
+                      a.shape, a.block_shape)
+        return jnp.sum(maple_spmm(aa, bb, bn=N, plan=tp) ** 2)
+
+    g_eager = jax.grad(loss, argnums=(0, 1))(a.blocks, b3)
+    g_jit = jax.jit(jax.grad(loss, argnums=(0, 1)))(a.blocks, b3)
+    for ge, gj in zip(g_eager, g_jit):
+        assert np.array_equal(np.asarray(ge), np.asarray(gj))

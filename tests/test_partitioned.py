@@ -1,0 +1,342 @@
+"""Mesh-partitioned SpMM tests: partition invariants (every block-row on
+exactly one device, shard plans reassemble the global pattern), execution
+equivalence (shard_map path ≡ stacked-loop path bit-level; partitioned ≡
+single-device compact kernel bit-level at D=1 and to f32-rounding
+tolerance across device counts), and the split-row boundary case — fwd
+and grad.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+exercise the real ``shard_map`` mesh path (the `multi-device` CI job
+does); on a 1-device box the same plans execute as a stacked loop and
+every test still runs (mesh-specific ones skip).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import BlockCSR
+from repro.distributed.sharding import (PARTITION_AXIS,
+                                        local_partition_execution,
+                                        partition_mesh)
+from repro.kernels import (maple_spmm, plan_partitioned_spmm,
+                           plan_partitioned_spmm_vjp, plan_spmm,
+                           plan_spmm_vjp)
+
+pytestmark = pytest.mark.tier1
+
+N_DEV = len(jax.local_devices())
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+def _pattern(rng, gm, gk, kind):
+    if kind == "uniform":
+        mask = rng.random((gm, gk)) < 0.4
+    elif kind == "power_law":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            ln = max(1, int(round(gk * (i + 1) ** -1.3)))
+            mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.abs(np.subtract.outer(np.arange(gm),
+                                        np.arange(gk))) <= 1
+    elif kind == "empty_rows":
+        mask = rng.random((gm, gk)) < 0.5
+        mask[::2] = False
+    elif kind == "all_zero":
+        mask = np.zeros((gm, gk), bool)
+    else:
+        raise ValueError(kind)
+    return mask
+
+
+def _bsr(rng, mask, bm=8, bk=8, extra_pad=0):
+    gm, gk = mask.shape
+    d = rng.standard_normal((gm * bm, gk * bk)).astype(np.float32)
+    d *= np.repeat(np.repeat(mask, bm, 0), bk, 1)
+    nnzb = int(mask.sum())
+    return d, BlockCSR.from_dense(d, (bm, bk),
+                                  n_blocks_max=max(nnzb, 1) + extra_pad)
+
+
+KINDS = ["uniform", "power_law", "banded", "empty_rows", "all_zero"]
+
+
+# --------------------------------------------------------------------------
+# partition invariants
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_every_row_on_exactly_one_device(kind, n_shards):
+    """Default partitioning (no device_chunk): each non-empty block-row is
+    owned by exactly one shard — the no-psum guarantee."""
+    rng = np.random.default_rng(7)
+    mask = _pattern(rng, 8, 8, kind)
+    _, a = _bsr(rng, mask, extra_pad=2)
+    plan = plan_partitioned_spmm(a, n_shards=n_shards, n_lanes=3)
+    assert plan.split_rows == ()
+    nonempty = set(np.nonzero(mask.any(axis=1))[0].tolist())
+    owners = {}
+    for d, shard in enumerate(plan.shards):
+        for r in np.nonzero(shard.written.any(axis=0))[0]:
+            owners.setdefault(int(r), []).append(d)
+    assert set(owners) == nonempty
+    for r, ds in owners.items():
+        assert len(ds) == 1, f"row {r} on devices {ds}"
+        assert plan.row_shard[r] == ds[0]
+    # empty rows are owned by nobody
+    assert all(plan.row_shard[r] == -1 for r in range(8) if r not in owners)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded"])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_shard_plans_reassemble_global_pattern(kind, n_shards):
+    """Per-shard gather maps partition the global live slots exactly once,
+    and every scheduled step consumes the (row, col) of the global block
+    its gather resolves to — the shards ARE the global pattern."""
+    rng = np.random.default_rng(11)
+    mask = _pattern(rng, 8, 8, kind)
+    _, a = _bsr(rng, mask, extra_pad=3)
+    nnzb = int(mask.sum())
+    plan = plan_partitioned_spmm(a, n_shards=n_shards, n_lanes=3)
+    block_row = np.asarray(a.block_row)
+    block_col = np.asarray(a.block_col)
+
+    covered = np.concatenate(
+        [plan.gather[d][plan.gather_live[d]] for d in range(n_shards)])
+    assert sorted(covered.tolist()) == list(range(nnzb))
+
+    for d, shard in enumerate(plan.shards):
+        live = shard.step_col >= 0
+        # each shard schedules each of its local slots exactly once
+        n_local = int(plan.gather_live[d].sum())
+        assert sorted(shard.order[live].tolist()) == list(range(n_local))
+        g_slots = plan.gather[d][shard.order[live]]
+        np.testing.assert_array_equal(block_row[g_slots],
+                                      shard.step_row[live])
+        np.testing.assert_array_equal(block_col[g_slots],
+                                      shard.step_col[live])
+        # the padded/stacked arrays agree with the per-shard plan
+        s0 = shard.steps
+        np.testing.assert_array_equal(plan.order[d, :, :s0], shard.order)
+        np.testing.assert_array_equal(plan.step_col[d, :, :s0],
+                                      shard.step_col)
+        np.testing.assert_array_equal(
+            plan.slot_row[d, :, :shard.r_max], shard.slot_row)
+        # pad columns extend each lane's final run: never a live step
+        assert (plan.step_col[d, :, s0:] == -1).all()
+
+
+def test_split_row_boundary_case():
+    """device_chunk splits heavy rows across devices; the epilogue's
+    scatter-add merges their f32 partials (the only psum-like merge)."""
+    rng = np.random.default_rng(3)
+    mask = np.zeros((4, 16), bool)
+    mask[0] = True                       # one dominant row
+    mask[1:, 0] = True
+    d, a = _bsr(rng, mask)
+    plan = plan_partitioned_spmm(a, n_shards=4, n_lanes=2, device_chunk=4)
+    assert 0 in plan.split_rows          # the heavy row crosses devices
+    owners = [d_ for d_, s in enumerate(plan.shards)
+              if s.written.any(axis=0)[0]]
+    assert len(owners) > 1
+    b = rng.standard_normal((128, 32)).astype(np.float32)
+    out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16, plan=plan))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+    # splitting across devices also balances them: the heavy row no
+    # longer pins the makespan to one device
+    whole = plan_partitioned_spmm(a, n_shards=4, n_lanes=2)
+    assert plan.predicted_cycles()["plan"] \
+        <= whole.predicted_cycles()["plan"]
+
+
+def test_validation():
+    rng = np.random.default_rng(0)
+    _, a = _bsr(rng, _pattern(rng, 4, 4, "uniform"))
+    with pytest.raises(ValueError, match="n_shards"):
+        plan_partitioned_spmm(a, n_shards=0)
+    with pytest.raises(ValueError, match="device_chunk"):
+        plan_partitioned_spmm(a, n_shards=2, device_chunk=0)
+    with pytest.raises(ValueError, match="n_shards only applies"):
+        maple_spmm(a, jnp.zeros((32, 16), jnp.float32), bn=16,
+                   schedule="balanced", n_shards=2)
+    # plan/operand mismatch: gather indexes past a thinner operand
+    mask_dense = np.ones((4, 4), bool)
+    mask_thin = np.zeros((4, 4), bool)
+    mask_thin[np.arange(4), np.arange(4)] = True
+    _, a_dense = _bsr(rng, mask_dense)
+    _, a_thin = _bsr(rng, mask_thin)
+    plan = plan_partitioned_spmm(a_dense, n_shards=2)
+    with pytest.raises(ValueError, match="capacity"):
+        maple_spmm(a_thin, jnp.zeros((32, 16), jnp.float32), bn=16,
+                   plan=plan)
+
+
+# --------------------------------------------------------------------------
+# execution equivalence: partitioned ≡ single-device, fwd and grad
+# --------------------------------------------------------------------------
+
+def _grads(a, b, plan, bn=16):
+    def loss(blocks, bb):
+        w = BlockCSR(blocks, a.block_col, a.block_row, a.row_ptr, a.shape,
+                     a.block_shape)
+        return jnp.sum(maple_spmm(w, bb, bn=bn, plan=plan) ** 2)
+    return jax.jit(jax.grad(loss, argnums=(0, 1)))(a.blocks, b)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_partitioned_bit_identical_to_compact_at_d1(kind):
+    """A 1-shard partition IS the single-device compact schedule: same
+    plan, same kernel, same merge — outputs and gradients bit-identical
+    to ``maple_spmm`` on ``plan_spmm(fused='compact')``."""
+    rng = np.random.default_rng(13)
+    mask = _pattern(rng, 8, 8, kind)
+    d, a = _bsr(rng, mask, extra_pad=2)
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+
+    part = plan_partitioned_spmm_vjp(a, n_shards=1, n_lanes=4)
+    single = plan_spmm_vjp(a, n_lanes=4, fused="compact")
+    out_p = np.asarray(maple_spmm(a, b, bn=16, plan=part))
+    out_s = np.asarray(maple_spmm(a, b, bn=16, plan=single))
+    assert np.array_equal(out_p, out_s)
+    da_p, db_p = _grads(a, b, part)
+    da_s, db_s = _grads(a, b, single)
+    assert np.array_equal(np.asarray(da_p), np.asarray(da_s))
+    assert np.array_equal(np.asarray(db_p), np.asarray(db_s))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_partitioned_matches_single_device(kind, n_shards):
+    """Partitioned fwd + grad reproduce the single-device planned kernel
+    across patterns and device counts (f32-rounding tolerance: the shard
+    split regroups the f32 chunk merges)."""
+    rng = np.random.default_rng(17)
+    mask = _pattern(rng, 8, 8, kind)
+    d, a = _bsr(rng, mask, extra_pad=2)
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+
+    part = plan_partitioned_spmm_vjp(a, n_shards=n_shards, n_lanes=4)
+    single = plan_spmm_vjp(a, n_lanes=4, fused="compact")
+    out_p = np.asarray(maple_spmm(a, b, bn=16, plan=part))
+    out_s = np.asarray(maple_spmm(a, b, bn=16, plan=single))
+    np.testing.assert_allclose(out_p, out_s, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out_p, d @ np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+    da_p, db_p = _grads(a, b, part)
+    da_s, db_s = _grads(a, b, single)
+    scale = max(float(np.abs(np.asarray(db_s)).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(db_p), np.asarray(db_s),
+                               rtol=1e-5, atol=1e-5 * scale)
+    scale = max(float(np.abs(np.asarray(da_s)).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(da_p), np.asarray(da_s),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs >1 device (run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded"])
+def test_mesh_path_bit_identical_to_loop_path(kind):
+    """The shard_map execution and the stacked single-device loop run the
+    identical per-shard kernels and epilogue — bit-identical fwd + grad.
+    This is the mesh-correctness pin: device placement must not change a
+    single ulp."""
+    n_shards = min(N_DEV, 8)
+    mesh, axis = partition_mesh(n_shards)
+    assert mesh is not None and axis == PARTITION_AXIS
+    rng = np.random.default_rng(19)
+    mask = _pattern(rng, 8, 8, kind)
+    d, a = _bsr(rng, mask, extra_pad=2)
+    b = jnp.asarray(rng.standard_normal((2, 64, 32)).astype(np.float32))
+
+    part = plan_partitioned_spmm_vjp(a, n_shards=n_shards, n_lanes=4)
+    out_mesh = np.asarray(maple_spmm(a, b, bn=16, plan=part))
+    da_m, db_m = _grads(a, b[0], part)
+    with local_partition_execution():
+        out_loop = np.asarray(maple_spmm(a, b, bn=16, plan=part))
+        da_l, db_l = _grads(a, b[0], part)
+    assert np.array_equal(out_mesh, out_loop)
+    assert np.array_equal(np.asarray(da_m), np.asarray(da_l))
+    assert np.array_equal(np.asarray(db_m), np.asarray(db_l))
+    np.testing.assert_allclose(
+        out_mesh, np.einsum("mk,gkn->gmn", d, np.asarray(b)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_eager_partitioned_schedule():
+    """schedule='partitioned' plans eagerly (n_shards defaults to every
+    local device) and matches dense."""
+    rng = np.random.default_rng(23)
+    mask = _pattern(rng, 8, 8, "power_law")
+    d, a = _bsr(rng, mask)
+    b = rng.standard_normal((64, 16)).astype(np.float32)
+    out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16,
+                                schedule="partitioned"))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+    out = np.asarray(maple_spmm(a, jnp.asarray(b), bn=16,
+                                schedule="partitioned", n_shards=3))
+    np.testing.assert_allclose(out, d @ b, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# model / serving integration
+# --------------------------------------------------------------------------
+
+def test_sparse_linear_partitioned():
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(0)
+    w = L.init_sparse_linear(key, 32, 48, block_shape=(8, 8),
+                             block_density=0.4)
+    wd = np.asarray(w.to_dense())
+    plan = plan_partitioned_spmm(w, n_shards=min(max(N_DEV, 2), 6),
+                                 n_lanes=2)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((2, 5, 32)).astype(np.float32))
+    y = np.asarray(L.sparse_linear(w, x, bn=16, plan=plan))
+    np.testing.assert_allclose(y, np.asarray(x) @ wd.T, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_sparse_logit_head_partitioned():
+    from repro.models import layers as L
+    from repro.serve.engine import SparseLogitHead
+    key = jax.random.PRNGKey(1)
+    w = L.init_sparse_linear(key, 32, 64, block_shape=(8, 8),
+                             block_density=0.3)
+    head = SparseLogitHead.build(w, n_lanes=4, n_shards=4)
+    hidden = jnp.asarray(np.random.default_rng(2)
+                         .standard_normal((2, 3, 32)).astype(np.float32))
+    logits = np.asarray(head(hidden))
+    np.testing.assert_allclose(
+        logits, np.asarray(hidden) @ np.asarray(w.to_dense()).T,
+        rtol=1e-4, atol=1e-4)
+    assert head.predicted_cycles["plan"] >= 1.0
+    # trainable partitioned head: grads flow through the mesh plans
+    head_t = SparseLogitHead.build(w, n_lanes=4, n_shards=4,
+                                   trainable=True)
+    grad = jax.jit(jax.grad(
+        lambda h: jnp.sum(head_t(h) ** 2)))(hidden)
+    assert np.isfinite(np.asarray(grad)).all()
+
+
+def test_sparse_mlp_plan_partitioned():
+    """lm.sparse_mlp_plan(n_shards=...) lifts the shared train plan to
+    the device array (the --partition path of examples/train_lm.py)."""
+    from repro.kernels.partition import PartitionedSpmmPlan
+    from repro.models import layers as L
+    from repro.models import lm as lm_mod
+    key = jax.random.PRNGKey(2)
+    w = L.init_sparse_linear(key, 32, 32, block_shape=(8, 8),
+                             block_density=0.5)
+    plan = lm_mod.sparse_mlp_plan({"w_down": w}, n_lanes=2, n_shards=4)
+    assert isinstance(plan.fwd, PartitionedSpmmPlan)
+    assert isinstance(plan.bwd, PartitionedSpmmPlan)
+    assert plan.fwd.n_shards == plan.bwd.n_shards == 4
+    pc = plan.predicted_cycles()
+    assert pc["fwd_plan"] >= 1.0 and pc["at_plan"] >= 1.0
