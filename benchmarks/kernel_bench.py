@@ -12,7 +12,7 @@ checked-in ``BENCH_kernels.json`` at the repo root is the baseline;
 regress more than ``--tol`` (deterministic — wall time is never gated).
 
 ``--smoke`` runs the reduced golden subset (schedule + fused-dataflow +
-partitioned sweeps) for CI.  The partitioned sweep prices the
+partitioned + autotune sweeps) for CI.  The partitioned sweep prices the
 mesh-partitioned plans (``kernels.partition``) across device counts —
 per-device predicted cycles plus a deterministic device-count scaling
 column.
@@ -44,8 +44,9 @@ from repro.core.csr import CSR, BlockCSR
 from repro.core.gustavson import dense_oracle, spmm_rowwise, spmspm_rowwise
 from repro.kernels import (local_block_attention, maple_spgemm, maple_spmm,
                            maple_spmspm, moe_expert_gemm,
-                           plan_partitioned_spmm, plan_spgemm, plan_spmm,
-                           plan_spmm_vjp)
+                           plan_partitioned_spmm, plan_search, plan_spgemm,
+                           plan_spmm, plan_spmm_vjp)
+from repro.kernels.autotune import fit_calibration, time_interleaved
 from repro.kernels.compat import tpu_compiler_params
 
 RECORDS: list = []
@@ -71,45 +72,14 @@ def _time(fn, *args, reps=3):
     return best * 1e6
 
 
-def _time_interleaved(fns: dict, args: dict, reps=8) -> dict:
-    """Best-of-``reps`` for several variants, measured round-robin so a
-    contention window on a shared CPU hits every variant equally — the
-    only fair way to compare dataflows when background load drifts slower
-    than one variant's full rep loop."""
-    for name, fn in fns.items():
-        jax.block_until_ready(fn(*args[name]))  # compile/warm all first
-    best = {name: float("inf") for name in fns}
-    for _ in range(reps):
-        for name, fn in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args[name]))
-            best[name] = min(best[name], time.perf_counter() - t0)
-    return {name: b * 1e6 for name, b in best.items()}
+# canonical copy lives in kernels.autotune (its measured-refinement rung
+# and these comparative sweeps must time identically — the calibration
+# fit is trained on these records); same contract as before
+_time_interleaved = time_interleaved
 
-
-def _pattern_mask(kind: str, rng, gm: int, gk: int) -> np.ndarray:
-    """Block masks for the scheduler sweep (the paper's workload axes)."""
-    if kind == "uniform":
-        mask = rng.random((gm, gk)) < 0.3
-    elif kind == "power_law":
-        # Zipf-ish row lengths: a few dominant rows — the MatRaptor
-        # worst case the chunked plan exists to fix.
-        mask = np.zeros((gm, gk), bool)
-        for i in range(gm):
-            ln = max(1, int(round(gk * (i + 1) ** -1.2)))
-            mask[i, rng.choice(gk, size=ln, replace=False)] = True
-    elif kind == "banded":
-        mask = np.zeros((gm, gk), bool)
-        for i in range(gm):
-            for j in range(gk):
-                if 0 <= i - j < 3:
-                    mask[i, j] = True
-    else:
-        raise ValueError(kind)
-    # no fully-empty matrix
-    if not mask.any():
-        mask[0, 0] = True
-    return mask
+# one source of truth with the autotune smoke and the autotuner tests:
+# the golden block patterns live in core.sparsity
+_pattern_mask = sparsity.block_pattern_mask
 
 
 def _masked_dense(rng, mask: np.ndarray, bm: int, bk: int) -> np.ndarray:
@@ -290,6 +260,59 @@ def partitioned_sweep(rng, *, smoke: bool = False):
                  devices_present=len(jax.local_devices()))
 
 
+def autotune_sweep(rng, *, smoke: bool = False):
+    """Autotuned plan (``kernels.autotune.plan_search``, surrogate-only)
+    vs the hand-tuned default plan on every golden pattern.
+
+    The acceptance bar is asserted right here, not just recorded: the
+    searched plan's predicted cycles must be ≤ the default's on every
+    uniform / power-law / banded record (the search always scores the
+    default config, so a violation means the autotuner is broken, not
+    unlucky).  ``pred_plan`` (the autotuned makespan) is golden-gated
+    like every other deterministic surrogate number; the measured columns
+    come from the interleaved timer.
+    """
+    gm = gk = 16
+    bm = bk = 16
+    n = 128
+    reps = 5 if smoke else 10
+    budget = 24
+    for kind in ("uniform", "power_law", "banded"):
+        mask = _pattern_mask(kind, rng, gm, gk)
+        d = _masked_dense(rng, mask, bm, bk)
+        a = BlockCSR.from_dense(d, (bm, bk))
+        b = jnp.asarray(rng.standard_normal((gk * bk, n)).astype(np.float32))
+        default = plan_spmm(a)
+        tuned, rep = plan_search(a, budget=budget, use_cache=False,
+                                 full=True)
+        pred_def = default.predicted_cycles()["plan"]
+        pred_auto = tuned.predicted_cycles()["plan"]
+        if pred_auto > pred_def:
+            raise RuntimeError(
+                f"autotune_{kind}: searched plan predicts {pred_auto:.0f} "
+                f"cycles vs default {pred_def:.0f} — the never-worse "
+                f"guarantee is broken")
+        times = _time_interleaved(
+            {"default": jax.jit(
+                lambda aa, bb, p=default: maple_spmm(aa, bb, plan=p)),
+             "auto": jax.jit(
+                 lambda aa, bb, p=tuned: maple_spmm(aa, bb, plan=p))},
+            {"default": (a, b), "auto": (a, b)}, reps=reps)
+        cfg = rep.best_config
+        emit(f"autotune_{kind}", times["auto"],
+             f"pred_auto={pred_auto:.0f}/pred_default={pred_def:.0f}"
+             f"/default_us={times['default']:.0f}"
+             f"/lanes={cfg['n_lanes']}/chunk={cfg['chunk']}"
+             f"/atomic={int(cfg['row_atomic'])}",
+             pred_plan=pred_auto, pred_default=pred_def,
+             default_us=round(times["default"], 1),
+             pred_speedup=round(pred_def / max(pred_auto, 1.0), 3),
+             n_built=rep.n_built, n_candidates=rep.n_candidates,
+             tuned_n_lanes=cfg["n_lanes"], tuned_chunk=cfg["chunk"],
+             tuned_row_atomic=bool(cfg["row_atomic"]),
+             tuned_fused=cfg["fused"])
+
+
 def schedule_sweep(rng, *, smoke: bool = False):
     """Planned vs row-atomic vs naive schedules across sparsity patterns.
 
@@ -299,7 +322,8 @@ def schedule_sweep(rng, *, smoke: bool = False):
     built once and closed over by a jitted call — what serving does — so
     us_per_call measures compiled execution, which tracks total grid
     steps: the load-balanced plan's makespan win over row-atomic shows up
-    directly.
+    directly.  The three schedules are timed interleaved (round-robin)
+    so drifting CPU load cannot bias one variant's column.
     """
     gm = gk = 16
     bm = bk = 16
@@ -310,27 +334,28 @@ def schedule_sweep(rng, *, smoke: bool = False):
         d = _masked_dense(rng, mask, bm, bk)
         a = BlockCSR.from_dense(d, (bm, bk))
         b = jnp.asarray(rng.standard_normal((gk * bk, n)).astype(np.float32))
+        plans = {sched: plan_spmm(a, n_lanes=n_lanes,
+                                  row_atomic=(sched == "row_atomic"))
+                 for sched in ("row_atomic", "balanced")}
+        fns = {"naive": jax.jit(lambda aa, bb: maple_spmm(
+            aa, bb, schedule="naive"))}
+        fns.update({sched: jax.jit(
+            lambda aa, bb, p=p: maple_spmm(aa, bb, plan=p))
+            for sched, p in plans.items()})
+        times = _time_interleaved(fns, {s: (a, b) for s in fns}, reps=reps)
         for sched in ("naive", "row_atomic", "balanced"):
             if sched == "naive":
-                fn = jax.jit(lambda aa, bb: maple_spmm(aa, bb,
-                                                       schedule="naive"))
-                us = _time(fn, a, b, reps=reps)
-                emit(f"spmm_{kind}_{sched}", us,
+                emit(f"spmm_{kind}_{sched}", times[sched],
                      f"blocks={int(mask.sum())}", blocks=int(mask.sum()))
             else:
-                plan = plan_spmm(a, n_lanes=n_lanes,
-                                 row_atomic=(sched == "row_atomic"))
-                fn = jax.jit(
-                    lambda aa, bb, p=plan: maple_spmm(aa, bb, plan=p))
-                us = _time(fn, a, b, reps=reps)
-                pc = plan.predicted_cycles()
-                emit(f"spmm_{kind}_{sched}", us,
+                pc = plans[sched].predicted_cycles()
+                emit(f"spmm_{kind}_{sched}", times[sched],
                      f"pred_plan={pc['plan']:.0f}"
                      f"/maple={pc['maple']:.0f}"
                      f"/row_atomic={pc['row_atomic']:.0f}",
                      pred_plan=pc["plan"], pred_maple=pc["maple"],
                      pred_row_atomic=pc["row_atomic"],
-                     bytes_out=plan.output_traffic_bytes(1, n))
+                     bytes_out=plans[sched].output_traffic_bytes(1, n))
     if smoke:
         return
 
@@ -345,13 +370,13 @@ def schedule_sweep(rng, *, smoke: bool = False):
     g = 4
     b3 = jnp.asarray(rng.standard_normal((g, gk * bk, n)).astype(np.float32))
     plan = plan_spmm(a, n_lanes=n_lanes)
-    fn = jax.jit(lambda aa, bb: maple_spmm(aa, bb, plan=plan))
-    us = _time(fn, a, b3, reps=20)
-    emit(f"spmm_batched_g{g}", us, "one_launch")
-    loop = jax.jit(lambda aa, bb: jnp.stack(
-        [maple_spmm(aa, bb[i], plan=plan) for i in range(g)]))
-    us = _time(loop, a, b3, reps=20)
-    emit(f"spmm_hostloop_g{g}", us, "per_rhs_launch")
+    times = _time_interleaved(
+        {"batched": jax.jit(lambda aa, bb: maple_spmm(aa, bb, plan=plan)),
+         "hostloop": jax.jit(lambda aa, bb: jnp.stack(
+             [maple_spmm(aa, bb[i], plan=plan) for i in range(g)]))},
+        {"batched": (a, b3), "hostloop": (a, b3)}, reps=20)
+    emit(f"spmm_batched_g{g}", times["batched"], "one_launch")
+    emit(f"spmm_hostloop_g{g}", times["hostloop"], "per_rhs_launch")
 
 
 def spgemm_sweep(rng):
@@ -369,15 +394,22 @@ def spgemm_sweep(rng):
         mask = sparsity.element_pattern_mask(kind, rng, m, m)
         d = (mask * rng.standard_normal((m, m))).astype(np.float32)
         a = CSR.from_dense(d)
-        for sched in ("naive", "row_atomic", "balanced"):
-            balance = {"balanced": "work", "row_atomic": "fibers",
-                       "naive": "none"}[sched]
-            plan = plan_spgemm(a, a, n_lanes=n_lanes, balance=balance)
-            fn = jax.jit(
-                lambda aa, p=plan: maple_spgemm(aa, aa, plan=p).value)
-            us = _time(fn, a, reps=5)
+        plans = {sched: plan_spgemm(
+            a, a, n_lanes=n_lanes,
+            balance={"balanced": "work", "row_atomic": "fibers",
+                     "naive": "none"}[sched])
+            for sched in ("naive", "row_atomic", "balanced")}
+        # all five rows of one pattern timed round-robin: the schedule
+        # comparison AND the oracle twins share any contention window
+        fns = {sched: jax.jit(
+            lambda aa, p=p: maple_spgemm(aa, aa, plan=p).value)
+            for sched, p in plans.items()}
+        fns["gustavson"] = lambda aa: spmspm_rowwise(aa, aa)
+        fns["dense"] = lambda aa: dense_oracle(aa, aa)
+        times = _time_interleaved(fns, {s: (a,) for s in fns}, reps=5)
+        for sched, plan in plans.items():
             pc = plan.predicted_cycles()
-            emit(f"spgemm_{kind}_{sched}", us,
+            emit(f"spgemm_{kind}_{sched}", times[sched],
                  f"pred_plan={pc['plan']:.0f}"
                  f"/maple={pc['maple']:.0f}"
                  f"/row_atomic={pc['row_atomic']:.0f}",
@@ -386,10 +418,8 @@ def spgemm_sweep(rng):
         c = maple_spgemm(a, a)
         err = float(np.abs(np.asarray(c.to_dense())
                            - np.asarray(dense_oracle(a, a))).max())
-        us = _time(lambda: spmspm_rowwise(a, a), reps=5)
-        emit(f"spgemm_{kind}_gustavson", us, "oracle")
-        us = _time(lambda: dense_oracle(a, a), reps=5)
-        emit(f"spgemm_{kind}_dense", us, f"max_err={err:.1e}",
+        emit(f"spgemm_{kind}_gustavson", times["gustavson"], "oracle")
+        emit(f"spgemm_{kind}_dense", times["dense"], f"max_err={err:.1e}",
              max_err=err)
 
 
@@ -420,13 +450,18 @@ def autodiff_sweep(rng):
         fwd = jax.jit(lambda blk, bb, w=a: maple_spmm(
             BlockCSR(blk, w.block_col, w.block_row, w.row_ptr, w.shape,
                      w.block_shape), bb, plan=tp))
-        us_f = _time(fwd, a.blocks, b, reps=10)
         grad = jax.jit(jax.grad(
             lambda blk, bb, w=a: jnp.sum(maple_spmm(
                 BlockCSR(blk, w.block_col, w.block_row, w.row_ptr, w.shape,
                          w.block_shape), bb, plan=tp) ** 2),
             argnums=(0, 1)))
-        us = _time(lambda blk, bb: grad(blk, bb)[0], a.blocks, b, reps=10)
+        # fwd vs fwd+bwd interleaved: their *gap* is the reported number
+        # (the A^T pass + SDDMM), so load drift between the two loops
+        # would land straight in the column of interest
+        times = _time_interleaved(
+            {"fwd": fwd, "grad": lambda blk, bb: grad(blk, bb)[0]},
+            {"fwd": (a.blocks, b), "grad": (a.blocks, b)}, reps=10)
+        us_f, us = times["fwd"], times["grad"]
         pc = tp.predicted_cycles()
         emit(f"spmm_grad_{kind}", us,
              f"fwd_us={us_f:.0f}/pred_fwd={pc['fwd_plan']:.0f}"
@@ -516,7 +551,8 @@ SMOKE_GOLDEN_NAMES = tuple(
     + [f"fused_{k}_L8_{f}" for k in ("uniform", "power_law", "banded")
        for f in ("rmw", "compact")]
     + [f"part_{k}_D{d}" for k in ("uniform", "power_law", "banded")
-       for d in (1, 2, 4, 8)])
+       for d in (1, 2, 4, 8)]
+    + [f"autotune_{k}" for k in ("uniform", "power_law", "banded")])
 
 
 def check_against(baseline_path: str, tol: float) -> int:
@@ -594,11 +630,24 @@ def run(smoke: bool = False):
     schedule_sweep(np.random.default_rng(0), smoke=smoke)
     fused_dataflow_sweep(np.random.default_rng(1), smoke=smoke)
     partitioned_sweep(np.random.default_rng(5), smoke=smoke)
+    autotune_sweep(np.random.default_rng(6), smoke=smoke)
     if smoke:
         return
     spgemm_sweep(np.random.default_rng(2))
     autodiff_sweep(np.random.default_rng(3))
     misc_sweeps(np.random.default_rng(4))
+
+
+def _git_rev() -> str:
+    """Short revision stamp for --json records (perf trajectory
+    attribution); "unknown" outside a git checkout."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def main(argv=None):
@@ -616,13 +665,30 @@ def main(argv=None):
     run(smoke=args.smoke)
 
     if args.json:
-        payload = {"schema": 1, "smoke": bool(args.smoke),
-                   "backend": jax.default_backend(), "records": RECORDS}
+        payload = {"schema": 2, "smoke": bool(args.smoke),
+                   "backend": jax.default_backend(),
+                   "git_rev": _git_rev(), "records": RECORDS}
+        # the surrogate-to-wall-clock affine fit: what objective="us"
+        # searches load (kernels.autotune), and the rank correlation that
+        # validates trusting the surrogate ordering.  Fit ONLY over the
+        # planned-SpMM family sharing one RHS geometry (the schedule +
+        # autotune sweeps: K=256, N=128, single RHS) — an affine
+        # cycles→µs map is per-workload-shape, and mixing the fused
+        # sweep's (G=2, N=256) records in yields a nonsense (negative-
+        # slope) fit dominated by geometry, not schedule quality
+        cal_family = [r for r in RECORDS
+                      if (r["name"].startswith("spmm_")
+                          and r["name"].split("_")[-1] in ("atomic",
+                                                           "balanced"))
+                      or r["name"].startswith("autotune_")]
+        cal = fit_calibration(cal_family, backend=jax.default_backend())
+        if cal is not None:
+            payload["calibration"] = cal
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
             f.write("\n")
-        print(f"# wrote {len(RECORDS)} records to {args.json}",
-              file=sys.stderr)
+        print(f"# wrote {len(RECORDS)} records to {args.json}"
+              f" (rev {payload['git_rev']})", file=sys.stderr)
     if args.check:
         return check_against(args.check, args.tol)
     return 0

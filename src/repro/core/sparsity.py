@@ -141,6 +141,38 @@ def table_i_clones(scale: float = 0.01, seed: int = 0) -> Dict[str, CSR]:
     return {ab: generate(sp, scale=scale, seed=seed) for ab, sp in TABLE_I.items()}
 
 
+def block_pattern_mask(kind: str, rng: np.random.Generator,
+                       gm: int, gk: int) -> np.ndarray:
+    """Block-granular sparsity masks — the golden workload patterns the
+    scheduler sweeps, the autotune smoke, and the autotuner tests share
+    (one source of truth so the bench gate and the CI autotune job can
+    never drift onto different patterns).
+
+    ``uniform`` iid 30% block density, ``power_law`` Zipf-ish block-row
+    lengths (a few dominant rows — the MatRaptor worst case the chunked
+    plan exists to fix), ``banded`` a 3-block lower band (FEM locality).
+    """
+    if kind == "uniform":
+        mask = rng.random((gm, gk)) < 0.3
+    elif kind == "power_law":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            ln = max(1, int(round(gk * (i + 1) ** -1.2)))
+            mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            for j in range(gk):
+                if 0 <= i - j < 3:
+                    mask[i, j] = True
+    else:
+        raise ValueError(kind)
+    # no fully-empty matrix
+    if not mask.any():
+        mask[0, 0] = True
+    return mask
+
+
 def element_pattern_mask(kind: str, rng: np.random.Generator,
                          m: int, k: int) -> np.ndarray:
     """Element-granular sparsity masks for the SpGEMM sweeps.

@@ -103,7 +103,14 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     Pass a prebuilt ``plan`` (``kernels.schedule.plan_spmm`` or, for
     training, ``plan_spmm_vjp``) to amortize planning across calls and to
     jit the planned path — serving builds it once per weight and closes a
-    jitted call over it.
+    jitted call over it.  ``plan="auto"`` autotunes instead of planning
+    with the hand-tuned defaults: a budgeted ``kernels.autotune``
+    search over the schedule knob space, memoized per sparsity pattern
+    (repeat calls on a seen pattern reuse the cached winner).  Eager
+    only — the search walks host metadata, so under jit run it outside
+    the trace and close the jitted call over the returned plan.  With
+    ``plan="auto"``, ``n_shards`` bounds the searched device axis rather
+    than pinning it (the search may conclude one device wins).
 
     **Autodiff** (``jax.custom_vjp``): ``dB = A^T @ dC`` runs the same
     planned kernel on the transposed block pattern, and ``dA`` is the
@@ -140,7 +147,22 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     if schedule == "naive" and plan is not None:
         raise ValueError("schedule='naive' does not execute a plan; "
                          "drop `plan` or pick a planned schedule")
-    if n_shards is not None:
+    auto_planned = False
+    if isinstance(plan, str):
+        if plan != "auto":
+            raise ValueError(f"unknown plan {plan!r}; pass a prebuilt plan "
+                             f"or 'auto'")
+        if _has_traced_metadata(a.row_ptr, a.block_row, a.block_col):
+            raise ValueError(
+                "plan='auto' searches host metadata and cannot run under "
+                "jit — autotune outside the trace "
+                "(kernels.autotune.plan_search) and close the jitted call "
+                "over the returned plan")
+        # lazy import: autotune builds on this module's executor
+        from repro.kernels.autotune import auto_plan
+        plan = auto_plan(a, n_shards=n_shards)
+        auto_planned = True
+    if n_shards is not None and not auto_planned:
         # n_shards must never be silently ignored: with a prebuilt plan it
         # is a cross-check against the plan's own shard count, without one
         # it only means something on the partitioned schedule

@@ -326,7 +326,12 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
 
     ``row_atomic=True`` keeps every block-row whole (one chunk per row) —
     the MatRaptor-style baseline schedule, exposed so benchmarks and tests
-    can price both on identical machinery.
+    can price both on identical machinery.  It is **incompatible with an
+    explicit ``chunk``**: the splitter would keep rows whole while the
+    plan recorded the ignored chunk size, so a cache or search key built
+    from the plan's knobs would alias distinct schedules — the
+    combination raises instead.  Row-atomic plans record ``chunk = 0``
+    (the rows-are-atomic convention ``SpgemmPlan`` already uses).
 
     ``fused`` selects the *preferred* in-kernel cross-lane merge layout
     (see :class:`SpmmPlan`); every plan derives both layouts' metadata,
@@ -343,14 +348,21 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
         raise ValueError(f"n_lanes={n_lanes} < 1")
     if fused == "auto":
         fused = "rmw"
+    if row_atomic and chunk is not None:
+        raise ValueError(
+            f"row_atomic=True keeps rows whole, so chunk={chunk} would be "
+            f"silently ignored (and a plan/cache key built from it would "
+            f"alias distinct plans) — drop one of the two")
     rptr = np.asarray(a.row_ptr).astype(np.int64)
     cols = np.asarray(a.block_col).astype(np.int32)
     gm = a.n_block_rows
     nnzb = int(rptr[-1])
     stats = bsr_stats(a)
-    if chunk is None:
+    if row_atomic:
+        chunk = 0                       # rows atomic (SpgemmPlan convention)
+    elif chunk is None:
         chunk = _default_chunk(nnzb, n_lanes)
-    if chunk < 1:
+    elif chunk < 1:
         raise ValueError(f"chunk={chunk} < 1")
 
     # 1. split rows into chunks of <= `chunk` blocks: (row, lo, hi) over
@@ -402,6 +414,107 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
                     n_real_steps=n_real, stats=stats,
                     block_m=a.block_shape[0], block_k=a.block_shape[1],
                     fused=fused)
+
+
+# --------------------------------------------------------------------------
+# Pattern hashing + knob enumeration (the autotuner's search space)
+# --------------------------------------------------------------------------
+
+def pattern_fingerprint(a: BlockCSR) -> str:
+    """Stable content hash of a BlockCSR's **sparsity pattern** — the plan
+    cache key (``kernels.autotune``).
+
+    Hashes exactly what planning reads: logical shape, block shape,
+    ``row_ptr`` and the **live prefix** of ``block_col``.  Deliberately
+    *excluded*: the payload (plans are pattern-only) and the container
+    capacity ``n_blocks_max`` (a plan gathers only live slots
+    ``< nnzb``, so the same plan is valid for any capacity holding this
+    pattern — two capacities of one pattern must hit the same cache
+    line).  Host-side; raises on traced metadata like every planner.
+    """
+    import hashlib
+
+    rptr = np.ascontiguousarray(np.asarray(a.row_ptr), dtype=np.int64)
+    nnzb = int(rptr[-1])
+    cols = np.ascontiguousarray(
+        np.asarray(a.block_col)[:nnzb], dtype=np.int32)
+    h = hashlib.sha256()
+    h.update(np.asarray(a.shape + a.block_shape, np.int64).tobytes())
+    h.update(rptr.tobytes())
+    h.update(cols.tobytes())
+    return h.hexdigest()
+
+
+def _chunk_candidates(row_lens: np.ndarray, n_lanes: int) -> List[Optional[int]]:
+    """Chunk-knob values worth trying for one lane count: the planner's
+    default heuristic (``None``), a few fixed power-of-two bounds, and the
+    longest row (== no splitting).  Deduped, deterministic order."""
+    nnzb = int(row_lens.sum())
+    max_len = int(row_lens.max(initial=0))
+    seen: List[Optional[int]] = [None]
+    resolved = {_default_chunk(nnzb, n_lanes)}
+    for c in (1, 2, 4, 8, max_len):
+        if 1 <= c <= max(max_len, 1) and c not in resolved:
+            resolved.add(c)
+            seen.append(c)
+    return seen
+
+
+def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
+                    shard_counts: Sequence[int] = (1,),
+                    fused_layouts: Sequence[str] = ("rmw", "compact"),
+                    ) -> List[Dict]:
+    """Enumerate the discrete SpMM schedule knob space for one pattern.
+
+    Each entry is a config dict with the full knob set —
+    ``n_lanes`` (powers of two ≤ ``n_lanes_max``), ``chunk``
+    (:func:`_chunk_candidates`; ``None`` = planner default), ``row_atomic``
+    (atomic configs carry ``chunk=None`` — the conflicting combination
+    raises in :func:`plan_spmm`), ``fused`` layout preference, and the
+    device axis ``n_shards`` / ``device_chunk`` (searched only for entries
+    of ``shard_counts`` > 1; ``device_chunk`` offers ``None`` = whole rows
+    plus one half-balanced-shard bound when a row overflows the balanced
+    shard).  Deterministic order — the autotuner's tie-break and seeding
+    contract depends on it.  Not enumerated (documented in
+    kernels/README.md): the block shape (a *container* property — changing
+    it reshapes the operand), ``bn`` (an execution tile, not a schedule
+    property), and the SpGEMM balance axis (different planner).
+    """
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    row_lens = np.diff(rptr)
+    nnzb = int(rptr[-1])
+    lanes_all: List[int] = []
+    l = 1
+    while l <= max(n_lanes_max, 1):
+        lanes_all.append(l)
+        l *= 2
+    cfgs: List[Dict] = []
+    for n_shards in shard_counts:
+        if n_shards < 1:
+            raise ValueError(f"shard count {n_shards} < 1")
+        dev_chunks: List[Optional[int]] = [None]
+        if n_shards > 1:
+            balanced = max(1, -(-nnzb // n_shards))
+            half = max(1, balanced // 2)
+            if int(row_lens.max(initial=0)) > balanced:
+                dev_chunks.append(half)
+        # partitioned execution is compact-layout by definition (shard
+        # outputs are disjoint per-device tiles), so the fused knob only
+        # varies on the single-device axis
+        layouts = fused_layouts if n_shards == 1 else ("compact",)
+        for device_chunk in dev_chunks:
+            for n_lanes in lanes_all:
+                for fused in layouts:
+                    cfgs.append(dict(n_lanes=n_lanes, chunk=None,
+                                     row_atomic=True, fused=fused,
+                                     n_shards=n_shards,
+                                     device_chunk=device_chunk))
+                    for chunk in _chunk_candidates(row_lens, n_lanes):
+                        cfgs.append(dict(n_lanes=n_lanes, chunk=chunk,
+                                         row_atomic=False, fused=fused,
+                                         n_shards=n_shards,
+                                         device_chunk=device_chunk))
+    return cfgs
 
 
 # --------------------------------------------------------------------------

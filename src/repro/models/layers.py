@@ -596,7 +596,11 @@ def sparse_linear(w: BlockCSR, x, *, plan=None, bn: int = 128,
 
     Pass ``plan`` (from ``repro.kernels.plan_spmm``, or ``plan_spmm_vjp``
     when gradients must flow under jit) to amortize schedule construction
-    across calls — layers build it once per weight.  The call is
+    across calls — layers build it once per weight.  ``plan="auto"``
+    autotunes eagerly instead (``kernels.autotune.plan_search``, memoized
+    per sparsity pattern — repeat calls on a seen weight pattern reuse
+    the cached winner; under jit prebuild with ``auto_plan`` and close
+    over the result).  The call is
     differentiable w.r.t. both ``w``'s payload and ``x`` through
     ``maple_spmm``'s custom VJP (A^T pass + block SDDMM; see
     ``kernels/README.md``).

@@ -208,7 +208,7 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 
 
 def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
-                    n_shards=None):
+                    n_shards=None, autotune: bool = False):
     """Build the shared ``SpmmTrainPlan`` for a sparse-MLP model.
 
     Every sparse layer shares the mask (``cfg.sparse_mask_seed``), so one
@@ -222,6 +222,12 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
     block-rows per device; the backward re-partitions on the transposed
     pattern) so the train step runs the sparse layers multi-device —
     pass ``len(jax.local_devices())`` to use every local device.
+
+    ``autotune=True`` replaces the hand-tuned ``n_lanes``/``chunk`` with
+    a budgeted ``kernels.autotune`` search over the mask's pattern
+    (memoized per pattern, so re-deriving the plan for the same mask
+    seed never re-searches); ``n_shards`` then bounds the searched
+    device axis instead of pinning it.
     """
     from repro.core.csr import BlockCSR
     from repro.kernels.schedule import plan_spmm_vjp
@@ -234,6 +240,9 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
     w = weights[0]
     if w.blocks.ndim == 4:          # stacked over layers: take layer 0
         w = jax.tree_util.tree_map(lambda a: a[0], w)
+    if autotune:
+        from repro.kernels.autotune import auto_plan
+        return auto_plan(w, trainable=True, n_shards=n_shards)
     return plan_spmm_vjp(w, n_lanes=n_lanes, chunk=chunk,
                          n_shards=n_shards)
 

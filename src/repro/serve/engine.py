@@ -55,7 +55,21 @@ class SparseLogitHead:
     @classmethod
     def build(cls, weight: BlockCSR, *, n_lanes: int = 8,
               chunk: int | None = None, n_shards: int | None = None,
-              trainable: bool = False) -> "SparseLogitHead":
+              trainable: bool = False,
+              plan: str | None = None) -> "SparseLogitHead":
+        """``plan="auto"`` replaces the hand-tuned knobs with a budgeted
+        ``kernels.autotune`` search over the head's sparsity pattern
+        (memoized — rebuilding a head for a seen pattern never replans);
+        ``n_shards`` then bounds the searched device axis and
+        ``n_lanes``/``chunk`` are ignored (the search owns them)."""
+        if plan is not None:
+            if plan != "auto":
+                raise ValueError(f"unknown plan {plan!r}; only 'auto' "
+                                 f"(or drop it for the hand-tuned knobs)")
+            from repro.kernels.autotune import auto_plan
+            return cls(weight=weight,
+                       plan=auto_plan(weight, trainable=trainable,
+                                      n_shards=n_shards))
         if trainable:
             plan = plan_spmm_vjp(weight, n_lanes=n_lanes, chunk=chunk,
                                  n_shards=n_shards)

@@ -274,7 +274,8 @@ def test_sddmm_bsr_kernel_matches_einsum():
 # --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("kind", [
-    pytest.param("uniform", marks=pytest.mark.tier1),
+    pytest.param("uniform",
+                 marks=[pytest.mark.tier1, pytest.mark.slow]),
     "power_law", "banded",
 ])
 def test_spgemm_grads_match_dense_oracle(kind):

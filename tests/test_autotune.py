@@ -1,0 +1,255 @@
+"""Autotuner tests: pattern fingerprints (stability, capacity/payload
+blindness, metadata sensitivity), plan-cache bit-identity, search
+determinism under a fixed seed, the never-worse-than-default guarantee on
+every golden pattern, calibration fit recovery, and the ``plan="auto"``
+integration surface."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.csr import BlockCSR
+from repro.core.sparsity import block_pattern_mask
+from repro.kernels import maple_spmm, plan_spmm
+from repro.kernels.autotune import (_plans_bit_identical, auto_plan,
+                                    calibrated_us, fit_calibration,
+                                    plan_cache_clear, plan_cache_stats,
+                                    plan_search, plan_search_vjp,
+                                    surrogate_cost)
+from repro.kernels.schedule import (SpmmTrainPlan, pattern_fingerprint,
+                                    spmm_knob_space)
+
+pytestmark = pytest.mark.tier1
+
+GM = GK = 8
+BM = BK = 8
+
+
+def _bsr(kind: str, seed: int = 0, extra_pad: int = 0,
+         payload_seed: int = 1):
+    rng = np.random.default_rng(seed)
+    if kind == "empty_rows":
+        mask = block_pattern_mask("uniform", rng, GM, GK)
+        mask[1] = False
+        mask[5] = False
+    else:
+        mask = block_pattern_mask(kind, rng, GM, GK)
+    d = np.random.default_rng(payload_seed).standard_normal(
+        (GM * BM, GK * BK)).astype(np.float32)
+    d *= np.repeat(np.repeat(mask, BM, 0), BK, 1)
+    nnzb = max(int(mask.sum()), 1)
+    a = BlockCSR.from_dense(jnp.asarray(d), (BM, BK),
+                            n_blocks_max=nnzb + extra_pad)
+    return d, a
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    plan_cache_clear()
+    yield
+    plan_cache_clear()
+
+
+# --------------------------------------------------------------------------
+# pattern fingerprint: the cache key's contract
+# --------------------------------------------------------------------------
+
+def test_fingerprint_stable_across_equal_patterns():
+    _, a = _bsr("uniform")
+    _, b = _bsr("uniform")
+    assert pattern_fingerprint(a) == pattern_fingerprint(b)
+
+
+def test_fingerprint_blind_to_payload_and_capacity():
+    # same pattern, different payload values -> same key (plans are
+    # pattern-only), and different container capacity -> same key (a plan
+    # gathers only live slots, so it is valid for any capacity)
+    _, a = _bsr("uniform", payload_seed=1)
+    _, b = _bsr("uniform", payload_seed=99)
+    _, c = _bsr("uniform", extra_pad=7)
+    assert pattern_fingerprint(a) == pattern_fingerprint(b)
+    assert pattern_fingerprint(a) == pattern_fingerprint(c)
+
+
+def test_fingerprint_misses_on_any_metadata_change():
+    _, a = _bsr("uniform")
+    fp = pattern_fingerprint(a)
+    # different pattern
+    _, b = _bsr("uniform", seed=3)
+    assert pattern_fingerprint(b) != fp
+    # same live blocks, different block shape / logical shape
+    d = np.asarray(a.to_dense())
+    half = BlockCSR.from_dense(jnp.asarray(d), (BM // 2, BK // 2))
+    assert pattern_fingerprint(half) != fp
+    wide = BlockCSR.from_dense(
+        jnp.asarray(np.concatenate([d, np.zeros_like(d)], axis=1)),
+        (BM, BK))
+    assert pattern_fingerprint(wide) != fp
+
+
+# --------------------------------------------------------------------------
+# knob space
+# --------------------------------------------------------------------------
+
+def test_knob_space_shape_and_conventions():
+    _, a = _bsr("power_law")
+    cfgs = spmm_knob_space(a)
+    assert len(cfgs) == len({tuple(sorted((k, str(v)) for k, v in c.items()))
+                             for c in cfgs})  # no duplicate configs
+    for c in cfgs:
+        # atomic configs never carry an explicit chunk (the combination
+        # raises in plan_spmm) and single-device is the only axis here
+        if c["row_atomic"]:
+            assert c["chunk"] is None
+        assert c["n_shards"] == 1 and c["device_chunk"] is None
+    sharded = spmm_knob_space(a, shard_counts=(1, 4))
+    assert {c["n_shards"] for c in sharded} == {1, 4}
+    assert all(c["fused"] == "compact" for c in sharded
+               if c["n_shards"] > 1)
+    with pytest.raises(ValueError):
+        spmm_knob_space(a, shard_counts=(0,))
+
+
+# --------------------------------------------------------------------------
+# the search: cache identity, determinism, never-worse
+# --------------------------------------------------------------------------
+
+def test_cache_hit_returns_identical_plan():
+    _, a = _bsr("uniform")
+    p1 = plan_search(a, budget=12)
+    p2 = plan_search(a, budget=12)
+    assert p2 is p1
+    stats = plan_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    # a pattern-equal but distinct container hits the same cache line
+    _, b = _bsr("uniform", extra_pad=5, payload_seed=42)
+    assert plan_search(b, budget=12) is p1
+
+
+def test_research_after_clear_is_bit_identical():
+    _, a = _bsr("power_law")
+    p1 = plan_search(a, budget=12)
+    plan_cache_clear()
+    p3 = plan_search(a, budget=12)
+    assert p3 is not p1
+    assert _plans_bit_identical(p1, p3)
+
+
+def test_search_deterministic_under_fixed_seed():
+    _, a = _bsr("banded")
+    p1 = plan_search(a, budget=12, seed=7, use_cache=False)
+    p2 = plan_search(a, budget=12, seed=7, use_cache=False)
+    assert _plans_bit_identical(p1, p2)
+
+
+def test_different_search_params_are_distinct_cache_lines():
+    _, a = _bsr("uniform")
+    plan_search(a, budget=6)
+    plan_search(a, budget=12)
+    plan_search(a, budget=12, objective="traffic")
+    assert plan_cache_stats()["size"] == 3
+
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded",
+                                  "empty_rows"])
+def test_autotuned_never_worse_than_default(kind):
+    _, a = _bsr(kind)
+    default = plan_spmm(a)
+    tuned, rep = plan_search(a, budget=16, full=True)
+    pred_def = default.predicted_cycles()["plan"]
+    pred_auto = tuned.predicted_cycles()["plan"]
+    assert pred_auto <= pred_def
+    assert rep.default_score is not None  # the baseline was really scored
+    assert rep.best_score <= rep.default_score
+    # and the winner computes the right thing
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((GK * BK, 16)).astype(np.float32))
+    got = np.asarray(maple_spmm(a, b, plan=tuned))
+    want = np.asarray(a.to_dense()) @ np.asarray(b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_traffic_objective_ranks_by_traffic():
+    _, a = _bsr("uniform")
+    p = plan_search(a, budget=16, objective="traffic", use_cache=False)
+    t_auto, _ = surrogate_cost(p, objective="traffic")
+    t_def, _ = surrogate_cost(plan_spmm(a), objective="traffic")
+    assert t_auto <= t_def
+
+
+def test_search_vjp_returns_cached_train_plan():
+    _, a = _bsr("power_law")
+    tp = plan_search_vjp(a, budget=12)
+    assert isinstance(tp, SpmmTrainPlan)
+    assert plan_search_vjp(a, budget=12) is tp
+    # the train plan's forward IS the searched forward plan
+    assert plan_search(a, budget=12) is tp.fwd
+
+
+# --------------------------------------------------------------------------
+# calibration
+# --------------------------------------------------------------------------
+
+def test_calibration_fit_recovers_affine_map():
+    recs = [{"pred_plan": c, "us_per_call": 2.5 * c + 40.0}
+            for c in (10, 25, 60, 130, 300)]
+    cal = fit_calibration(recs, backend="cpu")
+    assert abs(cal["us_per_cycle"] - 2.5) < 1e-6
+    assert abs(cal["us_base"] - 40.0) < 1e-6
+    assert cal["r2"] == pytest.approx(1.0)
+    assert cal["rank_corr"] == pytest.approx(1.0)
+    assert cal["n_points"] == 5
+    assert calibrated_us(100, cal) == pytest.approx(290.0)
+
+
+def test_calibration_needs_enough_points_and_gates_us_objective():
+    assert fit_calibration([{"pred_plan": 1, "us_per_call": 2}],
+                           backend="cpu") is None
+    _, a = _bsr("uniform")
+    with pytest.raises(ValueError, match="calibration"):
+        plan_search(a, objective="us")
+    cal = {"backend": "cpu", "us_per_cycle": 2.0, "us_base": 10.0}
+    p = plan_search(a, budget=12, objective="us", calibration=cal,
+                    use_cache=False)
+    # an affine (monotonic) map preserves the cycles ordering
+    assert _plans_bit_identical(
+        p, plan_search(a, budget=12, use_cache=False))
+
+
+# --------------------------------------------------------------------------
+# integration: plan="auto" surfaces
+# --------------------------------------------------------------------------
+
+def test_maple_spmm_plan_auto_matches_dense_and_caches():
+    d, a = _bsr("uniform")
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.standard_normal((GK * BK, 24)).astype(np.float32))
+    got = np.asarray(maple_spmm(a, b, plan="auto"))
+    np.testing.assert_allclose(got, d @ np.asarray(b), rtol=1e-4, atol=1e-4)
+    maple_spmm(a, b, plan="auto")
+    assert plan_cache_stats()["hits"] >= 1
+    with pytest.raises(ValueError, match="unknown plan"):
+        maple_spmm(a, b, plan="fastest")
+
+
+def test_sparse_logit_head_auto():
+    from repro.serve.engine import SparseLogitHead
+
+    d, a = _bsr("power_law")
+    head = SparseLogitHead.build(a, plan="auto")
+    rng = np.random.default_rng(3)
+    hid = jnp.asarray(rng.standard_normal((2, 3, GK * BK)).astype(np.float32))
+    got = np.asarray(head(hid))
+    want = np.einsum("bsd,vd->bsv", np.asarray(hid), d)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    trainable = SparseLogitHead.build(a, plan="auto", trainable=True)
+    assert isinstance(trainable.plan, SpmmTrainPlan)
+    with pytest.raises(ValueError, match="unknown plan"):
+        SparseLogitHead.build(a, plan="bogus")
+
+
+def test_auto_plan_trainable_reuses_forward_cache():
+    _, a = _bsr("banded")
+    fwd = auto_plan(a)
+    tp = auto_plan(a, trainable=True)
+    assert tp.fwd is fwd

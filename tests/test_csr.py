@@ -45,6 +45,7 @@ def test_csr_row_ids():
     np.testing.assert_array_equal(rows, [0, 1])
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     m=st.integers(1, 24), n=st.integers(1, 24),
@@ -195,6 +196,7 @@ def test_to_dense_trailing_zero_rows_pad_contract():
         bad.check_pad_contract()
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(
     m=st.integers(1, 16), n=st.integers(1, 16),
@@ -215,6 +217,7 @@ def test_csr_transpose_property(m, n, density, seed, pad):
                                   np.asarray(a.row_ptr))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(
     gm=st.integers(1, 4), gk=st.integers(1, 4),

@@ -103,6 +103,7 @@ def test_compact_flush_buffer_is_plan_sized():
 # schedule equivalence against the fused path, bit-level jit/no-jit
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("fused", ["rmw", "compact"])
 @pytest.mark.parametrize("row_atomic", [False, True])
 def test_fused_jit_nojit_bit_identical(fused, row_atomic):
@@ -134,8 +135,12 @@ def test_fused_layouts_match_each_other_and_naive(schedule):
     naive = np.asarray(maple_spmm(a, b3, bn=N, schedule="naive"))
     outs = {}
     for fused in ("rmw", "compact"):
-        plan = plan_spmm(a, n_lanes=LANES, chunk=2,
-                         row_atomic=(schedule == "row_atomic"), fused=fused)
+        # row_atomic forbids an explicit chunk (it would be silently
+        # ignored — plan_spmm raises on the combination)
+        row_atomic = schedule == "row_atomic"
+        plan = plan_spmm(a, n_lanes=LANES,
+                         chunk=None if row_atomic else 2,
+                         row_atomic=row_atomic, fused=fused)
         outs[fused] = np.asarray(maple_spmm(a, b3, bn=N, plan=plan))
         np.testing.assert_allclose(outs[fused], naive, rtol=1e-5, atol=1e-5)
         expect = np.einsum("mk,gkn->gmn", d, np.asarray(b3))

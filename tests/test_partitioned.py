@@ -212,7 +212,8 @@ def test_partitioned_bit_identical_to_compact_at_d1(kind):
 
 
 @pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("n_shards", [2, 8])
+@pytest.mark.parametrize(
+    "n_shards", [2, pytest.param(8, marks=pytest.mark.slow)])
 def test_partitioned_matches_single_device(kind, n_shards):
     """Partitioned fwd + grad reproduce the single-device planned kernel
     across patterns and device counts (f32-rounding tolerance: the shard
@@ -303,6 +304,7 @@ def test_sparse_linear_partitioned():
                                atol=1e-4)
 
 
+@pytest.mark.slow
 def test_sparse_logit_head_partitioned():
     from repro.models import layers as L
     from repro.serve.engine import SparseLogitHead

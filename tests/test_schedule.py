@@ -314,6 +314,23 @@ def test_shape_validation():
         plan_spmm(a, chunk=0)
 
 
+def test_row_atomic_rejects_explicit_chunk():
+    """Regression: row_atomic used to silently ignore an explicit chunk
+    while the plan still *recorded* it, so a cache/search key built from
+    the plan's knobs aliased distinct schedules.  Now the conflicting
+    combination raises, and atomic plans record chunk=0 (the
+    rows-are-atomic convention SpgemmPlan already uses)."""
+    rng = np.random.default_rng(0)
+    a = BlockCSR.from_dense(
+        rng.standard_normal((32, 32)).astype(np.float32), (8, 8))
+    with pytest.raises(ValueError, match="row_atomic.*chunk"):
+        plan_spmm(a, row_atomic=True, chunk=2)
+    atom = plan_spmm(a, row_atomic=True)
+    assert atom.chunk == 0
+    # the balanced default still records its resolved chunk
+    assert plan_spmm(a).chunk >= 1
+
+
 # --------------------------------------------------------------------------
 # model / serving integration
 # --------------------------------------------------------------------------

@@ -265,6 +265,7 @@ def test_spgemm_plan_row_upper_bound():
     assert (plan.row_upper >= np.diff(plan.out_row_ptr)).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(m=st.integers(1, 12), k=st.integers(1, 10), n=st.integers(1, 12),
        da=st.floats(0.0, 0.5), db=st.floats(0.0, 0.5),
