@@ -12,10 +12,13 @@ checked-in ``BENCH_kernels.json`` at the repo root is the baseline;
 regress more than ``--tol`` (deterministic — wall time is never gated).
 
 ``--smoke`` runs the reduced golden subset (schedule + fused-dataflow +
-partitioned + autotune sweeps) for CI.  The partitioned sweep prices the
-mesh-partitioned plans (``kernels.partition``) across device counts —
-per-device predicted cycles plus a deterministic device-count scaling
-column.
+partitioned + partitioned_2d + autotune sweeps) for CI.  The partitioned
+sweep prices the mesh-partitioned plans (``kernels.partition``) across
+device counts — per-device predicted cycles plus a deterministic
+device-count scaling column; the partitioned_2d sweep adds the
+``(shard, col)`` mesh shapes, tracking per-device dense-operand bytes
+(shrinks ``n_col_shards``×) and SPMD ``padding_waste`` with/without the
+repack pass.
 
 The ``fused_dataflow`` sweep is the measured trajectory of this repo's
 output-dataflow work: the fused planned kernels (in-kernel cross-lane
@@ -257,6 +260,61 @@ def partitioned_sweep(rng, *, smoke: bool = False):
                  scaling=round(scaling, 3),
                  per_shard_pred=[round(c, 1)
                                  for c in plan.per_shard_cycles()],
+                 devices_present=len(jax.local_devices()))
+
+
+def partitioned_2d_sweep(rng, *, smoke: bool = False):
+    """2-D ``(shard, col)`` mesh plans: the dense-operand memory axis.
+
+    Column panels change *placement*, not the schedule — ``pred_plan``
+    (golden-gated) is per-output-column-tile and must match the 1-D plan
+    at the same shard count exactly; what moves is ``b_bytes_per_device``
+    (each device holds ``ceil(N / C)`` columns of B instead of all of
+    it — asserted to shrink by exactly the panel ratio) and
+    ``padding_waste`` (the SPMD pad overhead the repack pass attacks,
+    recorded pre/post so the trajectory shows what repack buys).
+    ``scaling`` stays the device-count column vs the (1, 1) mesh.
+    """
+    gm = gk = 16
+    bm = bk = 16
+    n, g = 128, 2
+    reps = 3 if smoke else 8
+    for kind in ("uniform", "power_law", "banded"):
+        mask = _pattern_mask(kind, rng, gm, gk)
+        d = _masked_dense(rng, mask, bm, bk)
+        a = BlockCSR.from_dense(d, (bm, bk))
+        b3 = jnp.asarray(
+            rng.standard_normal((g, gk * bk, n)).astype(np.float32))
+        base = None
+        base_bytes = None
+        for shards, cols in ((1, 1), (2, 1), (2, 2), (4, 2)):
+            plan = plan_partitioned_spmm(a, n_shards=shards, n_lanes=4,
+                                         n_col_shards=cols)
+            raw = plan_partitioned_spmm(a, n_shards=shards, n_lanes=4,
+                                        n_col_shards=cols, repack=False)
+            pc = plan.predicted_cycles()
+            if base is None:
+                base = pc["plan"]
+                base_bytes = plan.dense_operand_bytes(n, g=g)
+            b_bytes = plan.dense_operand_bytes(n, g=g)
+            # column panels are a pure layout: per-device B bytes shrink
+            # by exactly the panel ratio, never the schedule
+            assert b_bytes * cols == base_bytes, (b_bytes, cols, base_bytes)
+            onedim = plan_partitioned_spmm(a, n_shards=shards, n_lanes=4)
+            assert pc["plan"] <= onedim.predicted_cycles()["plan"], \
+                f"2-D plan slower than 1-D at D={shards}"
+            scaling = base / max(pc["plan"], 1.0)
+            fn = jax.jit(lambda aa, bb, p=plan: maple_spmm(aa, bb, plan=p))
+            us = _time(fn, a, b3, reps=reps)
+            emit(f"part2d_{kind}_D{shards}x{cols}", us,
+                 f"pred_plan={pc['plan']:.0f}/b_kb={b_bytes / 1024:.0f}"
+                 f"/waste={plan.padding_waste:.3f}",
+                 pred_plan=pc["plan"], pred_maple=pc["maple"],
+                 pred_row_atomic=pc["row_atomic"], n_shards=shards,
+                 n_col_shards=cols, scaling=round(scaling, 3),
+                 b_bytes_per_device=b_bytes,
+                 padding_waste=round(plan.padding_waste, 4),
+                 padding_waste_no_repack=round(raw.padding_waste, 4),
                  devices_present=len(jax.local_devices()))
 
 
@@ -552,6 +610,8 @@ SMOKE_GOLDEN_NAMES = tuple(
        for f in ("rmw", "compact")]
     + [f"part_{k}_D{d}" for k in ("uniform", "power_law", "banded")
        for d in (1, 2, 4, 8)]
+    + [f"part2d_{k}_D{d}x{c}" for k in ("uniform", "power_law", "banded")
+       for d, c in ((1, 1), (2, 1), (2, 2), (4, 2))]
     + [f"autotune_{k}" for k in ("uniform", "power_law", "banded")])
 
 
@@ -630,6 +690,7 @@ def run(smoke: bool = False):
     schedule_sweep(np.random.default_rng(0), smoke=smoke)
     fused_dataflow_sweep(np.random.default_rng(1), smoke=smoke)
     partitioned_sweep(np.random.default_rng(5), smoke=smoke)
+    partitioned_2d_sweep(np.random.default_rng(7), smoke=smoke)
     autotune_sweep(np.random.default_rng(6), smoke=smoke)
     if smoke:
         return

@@ -121,40 +121,81 @@ def active_mesh() -> Optional[Mesh]:
 # partitioned-kernel mesh (the Maple PE-array axis)
 # --------------------------------------------------------------------------
 
-# mesh axis the partitioned Maple kernels shard execution plans over —
-# the device-level realization of the paper's §V spatial PE array
+# mesh axes the partitioned Maple kernels shard execution over — the
+# device-level realization of the paper's §V spatial PE array.
+# PARTITION_AXIS carries the block-row split (plan metadata + payload);
+# COL_AXIS carries the dense operand's N-panel split (B is sharded, not
+# replicated, along it — the output concatenates panels back).
 PARTITION_AXIS = "shard"
+COL_AXIS = "col"
 
 
-def partition_mesh(n_shards: int) -> Tuple[Optional[Mesh], Optional[str]]:
+def partition_mesh(n_shards: int, n_col_shards: int = 1,
+                   ) -> Tuple[Optional[Mesh],
+                              Optional[Union[str, Tuple[str, str]]]]:
     """Mesh for a :class:`~repro.kernels.partition.PartitionedSpmmPlan`.
+
+    Returns ``(mesh, axes)`` where ``axes`` is the ``PARTITION_AXIS``
+    name for a 1-D request (``n_col_shards == 1`` — unchanged contract)
+    or the ``(PARTITION_AXIS, COL_AXIS)`` pair for a 2-D request.
 
     Resolution order:
 
-    1. ``n_shards <= 1`` — no mesh; the executor runs the stacked shard
-       loop on one device (the planning math is identical either way);
+    1. ``n_shards * n_col_shards <= 1`` — no mesh; the executor runs the
+       stacked shard loop on one device (the planning math is identical
+       either way);
     2. the **bound mesh context** (``use_mesh_rules``) carries a
-       ``PARTITION_AXIS`` axis of exactly ``n_shards`` devices — reuse it,
-       so partitioned kernels compose with a larger training/serving mesh
-       that reserved a ``shard`` axis;
-    3. otherwise build a private 1-D mesh over the first ``n_shards``
-       of ``jax.local_devices()``;
-    4. fewer local devices than shards — ``(None, None)``: the executor
-       falls back to the single-device stacked loop, which computes the
-       *same* result (a plan built for 8 shards stays valid on a 1-device
-       box; tests rely on this to compare both paths bit-for-bit).
+       ``PARTITION_AXIS`` axis — reuse it, so partitioned kernels compose
+       with a larger training/serving mesh that reserved the partition
+       axes.  A bound mesh that carries the axis but at the *wrong size*
+       (or lacks a ``COL_AXIS`` that a 2-D request needs) **raises** —
+       never a silent fall-through to a private mesh, which would execute
+       on a different device set than the one the caller reserved;
+    3. otherwise build a private mesh over the first
+       ``n_shards * n_col_shards`` of ``jax.local_devices()`` — 1-D over
+       ``PARTITION_AXIS``, or ``(n_shards, n_col_shards)`` over
+       ``(PARTITION_AXIS, COL_AXIS)`` when column panels are requested;
+    4. fewer local devices than the request — ``(None, None)``: the
+       executor falls back to the single-device stacked loop, which
+       computes the *same* result (a plan built for 8 shards stays valid
+       on a 1-device box; tests rely on this to compare both paths
+       bit-for-bit).
     """
-    if n_shards <= 1 or _ctx.partition_disabled:
+    if n_col_shards < 1:
+        raise ValueError(f"n_col_shards={n_col_shards} < 1")
+    total = n_shards * n_col_shards
+    if total <= 1 or _ctx.partition_disabled:
         return None, None
+    axes = (PARTITION_AXIS, COL_AXIS) if n_col_shards > 1 else PARTITION_AXIS
     ctx = _ctx.mesh
-    if ctx is not None and PARTITION_AXIS in ctx.shape \
-            and ctx.shape[PARTITION_AXIS] == n_shards:
-        return ctx, PARTITION_AXIS
+    if ctx is not None and PARTITION_AXIS in ctx.shape:
+        if ctx.shape[PARTITION_AXIS] != n_shards:
+            raise ValueError(
+                f"bound mesh carries a {PARTITION_AXIS!r} axis of "
+                f"{ctx.shape[PARTITION_AXIS]} devices but the plan wants "
+                f"n_shards={n_shards} — rebind a matching mesh or drop "
+                f"the {PARTITION_AXIS!r} axis to let partition_mesh build "
+                f"a private one")
+        if n_col_shards > 1:
+            if COL_AXIS not in ctx.shape:
+                raise ValueError(
+                    f"bound mesh reserves {PARTITION_AXIS!r} but has no "
+                    f"{COL_AXIS!r} axis, and the plan wants "
+                    f"n_col_shards={n_col_shards} column panels — bind a "
+                    f"2-D ({PARTITION_AXIS!r}, {COL_AXIS!r}) mesh")
+            if ctx.shape[COL_AXIS] != n_col_shards:
+                raise ValueError(
+                    f"bound mesh carries a {COL_AXIS!r} axis of "
+                    f"{ctx.shape[COL_AXIS]} devices but the plan wants "
+                    f"n_col_shards={n_col_shards}")
+        return ctx, axes
     devices = jax.local_devices()
-    if len(devices) < n_shards:
+    if len(devices) < total:
         return None, None
-    return Mesh(np.asarray(devices[:n_shards]), (PARTITION_AXIS,)), \
-        PARTITION_AXIS
+    if n_col_shards > 1:
+        grid = np.asarray(devices[:total]).reshape(n_shards, n_col_shards)
+        return Mesh(grid, (PARTITION_AXIS, COL_AXIS)), axes
+    return Mesh(np.asarray(devices[:n_shards]), (PARTITION_AXIS,)), axes
 
 
 @contextlib.contextmanager

@@ -56,7 +56,8 @@ DEFAULT_BUDGET = 32
 # the hand-tuned defaults every caller gets without the autotuner — the
 # config the search must never lose to (always built, always scored)
 DEFAULT_CONFIG: Dict = dict(n_lanes=8, chunk=None, row_atomic=False,
-                            fused="rmw", n_shards=1, device_chunk=None)
+                            fused="rmw", n_shards=1, n_col_shards=1,
+                            device_chunk=None)
 
 
 # --------------------------------------------------------------------------
@@ -155,12 +156,13 @@ def _prescore(row_lens: np.ndarray, cfg: Dict) -> float:
 
 def build_plan(a: BlockCSR, cfg: Dict):
     """Materialize one knob config into its plan (single-device or
-    partitioned — the config's ``n_shards`` decides)."""
-    if int(cfg["n_shards"]) > 1:
+    partitioned — the config's ``n_shards`` / ``n_col_shards`` decide)."""
+    col = int(cfg.get("n_col_shards", 1))
+    if int(cfg["n_shards"]) > 1 or col > 1:
         return plan_partitioned_spmm(
             a, n_shards=int(cfg["n_shards"]), n_lanes=int(cfg["n_lanes"]),
             chunk=cfg["chunk"], device_chunk=cfg["device_chunk"],
-            row_atomic=bool(cfg["row_atomic"]))
+            row_atomic=bool(cfg["row_atomic"]), n_col_shards=col)
     return plan_spmm(a, n_lanes=int(cfg["n_lanes"]), chunk=cfg["chunk"],
                      row_atomic=bool(cfg["row_atomic"]), fused=cfg["fused"])
 
@@ -218,14 +220,32 @@ def _mesh_shard_counts() -> Tuple[int, ...]:
     return (1,)
 
 
-def _default_config_for(shard_counts: Sequence[int]) -> Dict:
+def _mesh_col_shard_counts() -> Tuple[int, ...]:
+    """Column-shard counts to pin right now: the bound mesh's ``COL_AXIS``
+    extent when it reserves one, else 1.  Unlike the shard axis this is
+    not *searched* — predicted cycles are per-output-column-tile, so the
+    column split never changes the surrogate's ordering; it is a memory
+    layout the mesh (or the caller) dictates."""
+    from repro.distributed.sharding import COL_AXIS, active_mesh
+
+    mesh = active_mesh()
+    if mesh is not None and COL_AXIS in mesh.shape \
+            and mesh.shape[COL_AXIS] > 1:
+        return (int(mesh.shape[COL_AXIS]),)
+    return (1,)
+
+
+def _default_config_for(shard_counts: Sequence[int],
+                        col_shard_counts: Sequence[int] = (1,)) -> Dict:
     """The hand-tuned baseline inside this search's space: plain defaults
     when single-device is searched, else defaults on the smallest shard
-    count (partitioned plans are compact-layout by construction)."""
+    count (partitioned plans are compact-layout by construction, and
+    carry the pinned column split — it never changes predicted cycles)."""
     cfg = dict(DEFAULT_CONFIG)
     if 1 not in shard_counts:
         cfg["n_shards"] = int(min(shard_counts))
         cfg["fused"] = "compact"
+        cfg["n_col_shards"] = int(min(col_shard_counts))
     return cfg
 
 
@@ -237,6 +257,7 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
                 budget: int = DEFAULT_BUDGET,
                 n_lanes_max: int = 16,
                 shard_counts: Optional[Sequence[int]] = None,
+                col_shard_counts: Optional[Sequence[int]] = None,
                 measure: bool = False, top_k: int = 3, reps: int = 4,
                 n_cols: int = 128, seed: int = 0,
                 calibration: Optional[Dict] = None,
@@ -255,8 +276,14 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     gates).
 
     ``shard_counts=None`` auto-detects: 1 plus the bound mesh's
-    ``PARTITION_AXIS`` extent (:func:`_mesh_shard_counts`).  Results are
-    cached per pattern fingerprint × search parameters; a hit returns the
+    ``PARTITION_AXIS`` extent (:func:`_mesh_shard_counts`);
+    ``col_shard_counts=None`` likewise pins the bound mesh's ``COL_AXIS``
+    extent (:func:`_mesh_col_shard_counts`).  Results are cached per
+    pattern fingerprint × search parameters — ``pattern_fingerprint`` is
+    deliberately blind to the partition axes (two capacities of one
+    pattern must share a cache line), so the **shard/col counts are part
+    of the key here**: a 2-D request can never be served a 1-D plan
+    cached for the same pattern, and vice versa.  A hit returns the
     *same* plan object.  ``full=True`` returns ``(plan, SearchReport)``.
 
     Host-side over static metadata like every planner — raises on traced
@@ -271,10 +298,13 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     if shard_counts is None:
         shard_counts = _mesh_shard_counts()
     shard_counts = tuple(int(s) for s in shard_counts)
+    if col_shard_counts is None:
+        col_shard_counts = _mesh_col_shard_counts()
+    col_shard_counts = tuple(int(s) for s in col_shard_counts)
 
     key = (pattern_fingerprint(a), "fwd", objective, int(budget),
-           int(n_lanes_max), shard_counts, bool(measure), int(top_k),
-           int(n_cols), int(seed))
+           int(n_lanes_max), shard_counts, col_shard_counts, bool(measure),
+           int(top_k), int(n_cols), int(seed))
     if use_cache and key in _PLAN_CACHE:
         _CACHE_STATS["hits"] += 1
         hit = _PLAN_CACHE[key]
@@ -284,8 +314,9 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
 
     # ---- rung 1: free analytic prescore over the full enumeration ----
     cfgs = spmm_knob_space(a, n_lanes_max=n_lanes_max,
-                           shard_counts=shard_counts)
-    default_cfg = _default_config_for(shard_counts)
+                           shard_counts=shard_counts,
+                           col_shard_counts=col_shard_counts)
+    default_cfg = _default_config_for(shard_counts, col_shard_counts)
     row_lens = np.diff(np.asarray(a.row_ptr).astype(np.int64))
     rng = np.random.default_rng(seed)
     jitter = rng.random(len(cfgs))  # deterministic tie-break within a rung
@@ -373,11 +404,12 @@ def plan_search_vjp(a: BlockCSR, **kw) -> SpmmTrainPlan:
         hit = _PLAN_CACHE[key]
         rep = dataclasses.replace(hit.report, cache_hit=True)
         return (hit.plan, rep) if full else hit.plan
-    if int(cfg["n_shards"]) > 1:
+    if int(cfg["n_shards"]) > 1 or int(cfg.get("n_col_shards", 1)) > 1:
         tp = plan_partitioned_spmm_vjp(
             a, n_shards=int(cfg["n_shards"]), n_lanes=int(cfg["n_lanes"]),
             chunk=cfg["chunk"], device_chunk=cfg["device_chunk"],
-            row_atomic=bool(cfg["row_atomic"]), fwd=fwd_plan)
+            row_atomic=bool(cfg["row_atomic"]),
+            n_col_shards=int(cfg.get("n_col_shards", 1)), fwd=fwd_plan)
     else:
         tp = plan_spmm_vjp(a, n_lanes=int(cfg["n_lanes"]), chunk=cfg["chunk"],
                            row_atomic=bool(cfg["row_atomic"]),
@@ -390,15 +422,20 @@ def plan_search_vjp(a: BlockCSR, **kw) -> SpmmTrainPlan:
 
 def auto_plan(a: BlockCSR, *, trainable: bool = False,
               n_shards: Optional[int] = None,
+              n_col_shards: Optional[int] = None,
               objective: str = "cycles",
               budget: int = DEFAULT_BUDGET, **kw):
     """The ``plan="auto"`` entry point model layers and serving call.
 
-    ``n_shards`` pins the device axis (the caller's mesh decision);
-    ``None`` auto-detects from the bound mesh.  ``trainable=True``
-    returns a :class:`~repro.kernels.schedule.SpmmTrainPlan`."""
+    ``n_shards`` bounds the searched device axis (the caller's mesh
+    decision); ``n_col_shards`` *pins* the column split — it is a memory
+    layout, not a schedule knob, so it is never searched.  ``None``
+    auto-detects both from the bound mesh.  ``trainable=True`` returns a
+    :class:`~repro.kernels.schedule.SpmmTrainPlan`."""
     if n_shards is not None:
         kw["shard_counts"] = (1, int(n_shards)) if n_shards > 1 else (1,)
+    if n_col_shards is not None:
+        kw["col_shard_counts"] = (int(n_col_shards),)
     search = plan_search_vjp if trainable else plan_search
     return search(a, objective=objective, budget=budget, **kw)
 
@@ -511,7 +548,12 @@ def _plans_bit_identical(x, y) -> bool:
                 and _plans_bit_identical(x.bwd, y.bwd)
                 and np.array_equal(x.t_perm, y.t_perm))
     if isinstance(x, PartitionedSpmmPlan):
-        fields = fields + ("gather", "gather_live", "row_shard")
+        if x.n_col_shards != y.n_col_shards:
+            return False
+        # stacked plans have no `written` map of their own (each shard's
+        # lives on the shard plan); the gather/ownership maps pin instead
+        fields = ("order", "step_row", "step_col", "flush_slot", "slot_row",
+                  "gather", "gather_live", "row_shard")
     return all(np.array_equal(np.asarray(getattr(x, f)),
                               np.asarray(getattr(y, f)))
                for f in fields)

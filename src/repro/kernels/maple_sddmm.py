@@ -28,6 +28,18 @@ one output slot per live non-zero; a dense ``dA`` is never materialized
   ``dA[s] = Σ_u B[k', u] · dC_row[pos[s, u]]`` (dead positions are ``-1``
   and match nothing).  Pad steps write a sacrificial output slot so idle
   lanes can never clobber a real gradient.
+
+**Partitioned backward** (``kernels.partition`` plans): the block SDDMM
+follows the *forward's* row ownership.  :func:`sddmm_shard_meta` reindexes
+the global block pattern through a partitioned plan's payload gather maps
+into per-shard ``(D, slot_cap)`` row/col metadata; each shard then runs
+:func:`maple_sddmm_bsr_pallas` on only the blocks it owns, with its dC
+row-tiles fetched from the (replicated-over-shard) cotangent and — on a
+2-D mesh — its B row-panels sliced along the column axis, the per-panel
+partials completed by a ``psum`` over that axis (the one collective the
+2-D layout needs: N is the SDDMM's *contraction* axis, so column panels
+sum rather than concatenate).  The shard-axis merge back to global block
+slots is pure placement — gather maps are disjoint by construction.
 """
 
 from __future__ import annotations
@@ -36,11 +48,34 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.accum import tile_bounds
 from repro.kernels.compat import tpu_compiler_params
+
+
+def sddmm_shard_meta(gather: np.ndarray, gather_live: np.ndarray,
+                     block_row: np.ndarray, block_col: np.ndarray,
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-shard block metadata for the partitioned dA SDDMM.
+
+    ``gather``/``gather_live`` are a ``PartitionedSpmmPlan``'s payload
+    maps (``(D, slot_cap)``: global block slot per shard-local slot);
+    ``block_row``/``block_col`` the *global* pattern.  Returns
+    ``(sd_row, sd_col)`` of shape ``(D, slot_cap)``: the rows/cols each
+    shard's local slots name, with dead slots clamped to row 0 / col -1 —
+    exactly the pad convention :func:`maple_sddmm_bsr_pallas` masks on,
+    so a per-shard kernel call computes zeros for them.
+    """
+    gat = np.asarray(gather)
+    live = np.asarray(gather_live)
+    br = np.asarray(block_row)[gat]
+    bc = np.asarray(block_col)[gat]
+    sd_row = np.where(live, br, 0).astype(np.int32)
+    sd_col = np.where(live, bc, -1).astype(np.int32)
+    return sd_row, sd_col
 
 
 # --------------------------------------------------------------------------

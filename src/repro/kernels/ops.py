@@ -29,7 +29,8 @@ from repro.distributed.sharding import partition_mesh
 from repro.kernels.block_attn import (block_attention_pallas,
                                       local_window_kv_map)
 from repro.kernels.maple_sddmm import (maple_sddmm_bsr_pallas,
-                                       maple_sddmm_csr_pallas)
+                                       maple_sddmm_csr_pallas,
+                                       sddmm_shard_meta)
 from repro.kernels.maple_spgemm import maple_spgemm_pallas
 from repro.kernels.maple_spmm import (maple_spmm_batched_pallas,
                                       maple_spmm_compact_pallas,
@@ -69,6 +70,7 @@ def _pad_cols(b: jax.Array, bn: int) -> tuple[jax.Array, int]:
 def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                schedule: str = "balanced", n_lanes: int = 8,
                chunk: int | None = None, n_shards: int | None = None,
+               n_col_shards: int | None = None,
                plan: SpmmPlan | SpmmTrainPlan | PartitionedSpmmPlan
                | None = None,
                interpret: bool | None = None) -> jax.Array:
@@ -95,10 +97,13 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
       devices (default: every ``jax.local_devices()``), one shard-local
       plan each, executed with ``shard_map`` over the
       ``distributed.sharding.partition_mesh`` axis (sparse operand and
-      plan metadata sharded, dense operand replicated, row-offset
+      plan metadata sharded along ``"shard"``; the dense operand is
+      replicated at ``n_col_shards=1`` or panel-split along the second
+      ``"col"`` mesh axis when ``n_col_shards > 1``; row-offset
       epilogue reassembling the disjoint row slices — see
-      ``kernels.partition``).  With fewer devices than shards the same
-      plan runs as a stacked single-device loop, bit-identically.
+      ``kernels.partition``).  With fewer devices than the
+      ``n_shards × n_col_shards`` request the same plan runs as a
+      stacked single-device loop, bit-identically.
 
     Pass a prebuilt ``plan`` (``kernels.schedule.plan_spmm`` or, for
     training, ``plan_spmm_vjp``) to amortize planning across calls and to
@@ -160,25 +165,32 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                 "over the returned plan")
         # lazy import: autotune builds on this module's executor
         from repro.kernels.autotune import auto_plan
-        plan = auto_plan(a, n_shards=n_shards)
+        plan = auto_plan(a, n_shards=n_shards, n_col_shards=n_col_shards)
         auto_planned = True
-    if n_shards is not None and not auto_planned:
-        # n_shards must never be silently ignored: with a prebuilt plan it
-        # is a cross-check against the plan's own shard count, without one
-        # it only means something on the partitioned schedule
+    if (n_shards is not None or n_col_shards is not None) \
+            and not auto_planned:
+        # shard counts must never be silently ignored: with a prebuilt
+        # plan they are a cross-check against the plan's own mesh shape,
+        # without one they only mean something on the partitioned schedule
         got = plan.fwd if isinstance(plan, SpmmTrainPlan) else plan
         if got is not None:
             if not isinstance(got, PartitionedSpmmPlan):
                 raise ValueError(
-                    "n_shards was given but the prebuilt plan is "
-                    "single-device — build it with plan_partitioned_spmm "
-                    "/ plan_spmm_vjp(n_shards=...) instead")
-            if got.n_shards != n_shards:
+                    "n_shards/n_col_shards was given but the prebuilt "
+                    "plan is single-device — build it with "
+                    "plan_partitioned_spmm / plan_spmm_vjp(n_shards=...) "
+                    "instead")
+            if n_shards is not None and got.n_shards != n_shards:
                 raise ValueError(
                     f"n_shards={n_shards} but the prebuilt plan has "
                     f"{got.n_shards} shards")
+            if n_col_shards is not None \
+                    and got.n_col_shards != n_col_shards:
+                raise ValueError(
+                    f"n_col_shards={n_col_shards} but the prebuilt plan "
+                    f"has {got.n_col_shards} column shards")
         elif schedule != "partitioned":
-            raise ValueError("n_shards only applies to "
+            raise ValueError("n_shards/n_col_shards only applies to "
                              "schedule='partitioned' (or pass a prebuilt "
                              "PartitionedSpmmPlan)")
     if b_dense.ndim not in (2, 3):
@@ -223,10 +235,11 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                 f"({plan.block_m}, {plan.block_k}), operand blocks are "
                 f"{a.block_shape} — was it built for this weight?")
     if plan is None and schedule == "partitioned":
+        col = n_col_shards if n_col_shards is not None else 1
         shards = n_shards if n_shards is not None \
-            else max(len(jax.local_devices()), 1)
+            else max(len(jax.local_devices()) // col, 1)
         plan = plan_partitioned_spmm(a, n_shards=shards, n_lanes=n_lanes,
-                                     chunk=chunk)
+                                     chunk=chunk, n_col_shards=col)
     if plan is None and schedule != "naive":
         # the fused kernels never materialize the full per-lane buffer
         # (rmw: none at all; compact: written-map-sized tiles), so auto
@@ -289,23 +302,31 @@ def _partitioned_spmm_f32(blocks, b3, plan: PartitionedSpmmPlan, *,
 
     Every shard runs the existing compact kernel on its own row slice:
     payload (gathered per-shard blocks) and plan metadata are sharded
-    along the leading device axis, the dense operand is replicated, and
-    the compact flush tiles come back device-stacked.  The row-offset
-    epilogue then scatters each shard's ``slot_row`` slots into its rows
-    of the global output — rows are disjoint across shards by default,
-    so the merge is a plain placement; only split-row boundary slots
-    (``plan.split_rows``) actually accumulate, in f32, inside the same
-    scatter-add.
+    along the leading device axis, and the compact flush tiles come back
+    device-stacked.  With ``plan.n_col_shards == 1`` the dense operand is
+    replicated on every shard (the 1-D layout); with ``n_col_shards > 1``
+    the mesh grows a ``COL_AXIS`` and B's N dimension is **panel-split**
+    along it instead — each ``(shard, col)`` device computes its
+    row-slice × column-panel, and the panels reassemble by placement in
+    the ``out_specs`` (disjoint slices of N: a concat, no collective).
+    The row-offset epilogue then scatters each shard's ``slot_row`` slots
+    into its rows of the global output — rows are disjoint across shards
+    by default, so that merge is a plain placement too; only split-row
+    boundary slots (``plan.split_rows``) actually accumulate, in f32,
+    inside the same scatter-add.
 
     Mesh resolution is ``distributed.sharding.partition_mesh``: with a
     live mesh the shard loop is a ``shard_map``; without one (fewer
-    devices than shards) the same per-shard computation runs as a stacked
-    loop on one device — bit-identical, because both paths execute the
+    devices than the request) the same per-shard computation runs as a
+    stacked loop on one device — bit-identical, because the kernel's
+    output-column tiles are independent (a full-N pass computes exactly
+    what the per-panel passes concatenate to) and both paths execute the
     identical per-shard kernel and the identical epilogue.
     """
     d_, cap = plan.gather.shape
     bm = plan.block_m
     gm = plan.n_block_rows
+    c_ = plan.n_col_shards
     gat = jnp.asarray(plan.gather)                    # (D, cap)
     live = jnp.asarray(plan.gather_live)
     shard_blocks = jnp.where(live[..., None, None], blocks[gat], 0)
@@ -319,8 +340,23 @@ def _partitioned_spmm_f32(blocks, b3, plan: PartitionedSpmmPlan, *,
             blk, o, r, c, f, bb, r_max=plan.r_max, bn=bn,
             interpret=interpret)                      # (G, L, r_max*bm, N)
 
-    mesh, axis = partition_mesh(d_)
-    if mesh is not None:
+    n_in = b3.shape[-1]
+    mesh, axes = partition_mesh(d_, c_)
+    if mesh is not None and c_ > 1:
+        # 2-D: panels must each be a bn multiple, so N pads to c_*bn here
+        # (zero columns; sliced back after the merge)
+        ax_s, ax_c = axes
+        b3p, _ = _pad_cols(b3, c_ * bn)
+        shard_fn = shard_map(
+            lambda blk, o, r, c, f, bb:
+                one_shard(blk[0], o[0], r[0], c[0], f[0], bb)[None],
+            mesh=mesh,
+            in_specs=(P(ax_s), P(ax_s), P(ax_s), P(ax_s), P(ax_s),
+                      P(None, None, ax_c)),
+            out_specs=P(ax_s, None, None, None, ax_c), check_rep=False)
+        tiles = shard_fn(shard_blocks, order, row, col, slot, b3p)
+    elif mesh is not None:
+        axis = axes
         shard_fn = shard_map(
             lambda blk, o, r, c, f, bb:
                 one_shard(blk[0], o[0], r[0], c[0], f[0], bb)[None],
@@ -329,17 +365,107 @@ def _partitioned_spmm_f32(blocks, b3, plan: PartitionedSpmmPlan, *,
             out_specs=P(axis), check_rep=False)
         tiles = shard_fn(shard_blocks, order, row, col, slot, b3)
     else:
+        # stacked loop: full-N per shard — output-column tiles are
+        # independent, so this equals the panel concat bit-for-bit
         tiles = jnp.stack([
             one_shard(shard_blocks[d], order[d], row[d], col[d], slot[d],
                       b3)
             for d in range(d_)])                      # (D, G, L, r_max*bm, N)
 
-    g, n = b3.shape[0], b3.shape[-1]
+    g, n = tiles.shape[1], tiles.shape[-1]
     tiles = jnp.moveaxis(tiles, 1, 0)                 # (G, D, L, r_max*bm, N)
     tiles = tiles.reshape(g, d_ * plan.n_lanes * plan.r_max, bm, n)
     # row-offset epilogue: duplicate row targets exist only for split-row
     # boundary slots
-    return _scatter_merge_f32(tiles, plan.slot_row, gm=gm, bm=bm)
+    out = _scatter_merge_f32(tiles, plan.slot_row, gm=gm, bm=bm)
+    return out[..., :n_in]
+
+
+def _partitioned_sddmm_f32(dc, b3, train: SpmmTrainPlan, *, bn: int,
+                           interpret: bool) -> jax.Array:
+    """Mesh-partitioned dA block SDDMM → ``(n_blocks_max, bm, bk)`` f32.
+
+    dA ownership follows the *forward* plan's payload gather maps: each
+    shard computes the ``(dC @ B^T)`` blocks it owns, fetching dC
+    row-tiles from the (shard-replicated) cotangent — dC rows follow the
+    forward's row split automatically because a shard only names rows it
+    owns.  On a 2-D mesh dC and B are both panel-split along ``COL_AXIS``;
+    N is the SDDMM's *contraction* axis, so the per-panel partials are
+    completed by a ``psum`` over that axis (the forward's concat becomes
+    the backward's one collective).  The merge back to global block slots
+    is pure placement — gather maps are disjoint by construction — done
+    as a scatter to a sacrificial-slot-extended buffer so live values
+    land bit-exactly (no ``+ 0.0`` rounding of the placement).
+
+    Without a mesh the same math runs as a stacked loop: the full-N
+    kernel per shard when ``n_col_shards == 1`` (bit-identical to the
+    single-device SDDMM — per-block accumulation order over ``(g, j)``
+    is launch-set independent), else per-panel partials summed in panel
+    order, mimicking the psum (allclose, not bitwise, to a one-pass
+    contraction — exactly as on the mesh).
+    """
+    fwd = train.fwd
+    bm, bk = train.block_shape
+    d_, cap = fwd.gather.shape
+    c_ = fwd.n_col_shards
+    sd_row, sd_col = sddmm_shard_meta(fwd.gather, fwd.gather_live,
+                                      train.block_row, train.block_col)
+    rowd = jnp.asarray(sd_row)
+    cold = jnp.asarray(sd_col)
+
+    def one_shard(r, c, dcl, bl):
+        return maple_sddmm_bsr_pallas(dcl, bl, r, c, bm=bm, bk=bk, bn=bn,
+                                      interpret=interpret)  # (cap, bm, bk)
+
+    mesh, axes = partition_mesh(d_, c_)
+    if mesh is not None and c_ > 1:
+        ax_s, ax_c = axes
+        dcp, _ = _pad_cols(dc, c_ * bn)
+        b3p, _ = _pad_cols(b3, c_ * bn)
+
+        def shard_body(r, c, dcl, bl):
+            part = one_shard(r[0], c[0], dcl, bl)
+            return jax.lax.psum(part, ax_c)[None]
+
+        parts = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(P(ax_s), P(ax_s), P(None, None, ax_c),
+                      P(None, None, ax_c)),
+            out_specs=P(ax_s), check_rep=False)(rowd, cold, dcp, b3p)
+    elif mesh is not None:
+        axis = axes
+        parts = shard_map(
+            lambda r, c, dcl, bl: one_shard(r[0], c[0], dcl, bl)[None],
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(), P()),
+            out_specs=P(axis), check_rep=False)(rowd, cold, dc, b3)
+    else:
+        if c_ > 1:
+            dcp, _ = _pad_cols(dc, c_ * bn)
+            b3p, _ = _pad_cols(b3, c_ * bn)
+            w = dcp.shape[-1] // c_
+            per = []
+            for d in range(d_):
+                acc = None
+                for ci in range(c_):
+                    sl = slice(ci * w, (ci + 1) * w)
+                    p = one_shard(rowd[d], cold[d], dcp[..., sl],
+                                  b3p[..., sl])
+                    acc = p if acc is None else acc + p
+                per.append(acc)
+        else:
+            per = [one_shard(rowd[d], cold[d], dc, b3) for d in range(d_)]
+        parts = jnp.stack(per)                        # (D, cap, bm, bk)
+
+    # placement merge: live slots are disjoint across shards; dead slots
+    # all target the sacrificial slot (their kernel output is zero anyway)
+    cap_global = train.n_blocks_max
+    live = np.asarray(fwd.gather_live)
+    gat_safe = np.where(live, np.asarray(fwd.gather), cap_global)
+    da = jnp.zeros((cap_global + 1, bm, bk), jnp.float32)
+    da = da.at[jnp.asarray(gat_safe.reshape(-1))].set(
+        parts.reshape(d_ * cap, bm, bk))
+    return da[:cap_global]
 
 
 def _planned_spmm_f32(blocks, b3, plan: SpmmPlan, *, bn: int,
@@ -428,10 +554,17 @@ def _spmm_bwd_kernel_path(blocks, b3, dc, train: SpmmTrainPlan, *,
     db = _planned_spmm_f32(at_blocks, dc, train.bwd, bn=bn,
                            interpret=interpret).astype(b3.dtype)
 
-    # --- dA = (dC @ B^T) sampled at nnz(A): the block SDDMM.
-    da = maple_sddmm_bsr_pallas(
-        dc, b3, jnp.asarray(train.block_row), jnp.asarray(train.block_col),
-        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    # --- dA = (dC @ B^T) sampled at nnz(A): the block SDDMM.  With a
+    # partitioned forward the SDDMM partitions over the same mesh — each
+    # shard samples only the blocks its gather map owns.
+    if isinstance(train.fwd, PartitionedSpmmPlan):
+        da = _partitioned_sddmm_f32(dc, b3, train, bn=bn,
+                                    interpret=interpret)
+    else:
+        da = maple_sddmm_bsr_pallas(
+            dc, b3, jnp.asarray(train.block_row),
+            jnp.asarray(train.block_col),
+            bm=bm, bk=bk, bn=bn, interpret=interpret)
     live = jnp.asarray(train.block_col >= 0)
     da = jnp.where(live[:, None, None], da, 0).astype(blocks.dtype)
     return da, db

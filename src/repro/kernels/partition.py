@@ -15,16 +15,27 @@ bounded chunk of one, for the heavy-row boundary case):
    row ids, locally compacted block slots) and gets its own ``SpmmPlan``
    with the usual lane/chunk knobs — so every shard runs the *existing*
    fused compact kernel, unchanged;
-3. the shard plans are padded to a common geometry (steps, ``r_max``,
+3. a **padding-aware repack** pass (on by default) then trades items
+   between devices to minimize the *stacked* geometry — every shard is
+   padded to the slowest shard's ``steps``, so the LPT objective here is
+   max steps-after-chunking, not raw block count (``padding_waste``
+   reports what the pad still costs);
+4. the shard plans are padded to a common geometry (steps, ``r_max``,
    slot capacity) and stacked along a leading device axis, which is what
-   ``shard_map`` shards: plan metadata and gathered payload travel
-   together, the dense operand stays replicated;
-4. shard outputs are compact flush tiles; a **row-offset epilogue**
+   ``shard_map`` shards over ``PARTITION_AXIS``.  The mesh may carry a
+   second ``COL_AXIS`` (``n_col_shards > 1``): the dense operand's N
+   dimension splits into per-device column panels instead of being
+   replicated, and every ``(shard, col)`` device runs the same compact
+   kernel on its row-slice × column-panel (plan metadata is identical
+   along ``COL_AXIS`` — the block pattern does not depend on N);
+5. shard outputs are compact flush tiles; a **row-offset epilogue**
    scatters each shard's slots into its rows of the global output.  Rows
    live on exactly one device by default, so the merge needs no psum —
    only when ``device_chunk`` splits a heavy row across devices do two
    shards contribute f32 partials to the same row (the split-row
    boundary case), and the scatter-*add* handles that in the same pass.
+   Column panels are disjoint slices of N, so the ``COL_AXIS`` merge is
+   a pure concatenation (the ``out_specs`` placement — no collective).
 
 Like every plan here, construction is host-side numpy over static
 metadata: build once per weight pattern, close jitted calls over it.
@@ -43,8 +54,8 @@ import numpy as np
 from repro.core.csr import BlockCSR
 from repro.core.maple import (SpGEMMStats, baseline_pe_cycles,
                               maple_pe_cycles)
-from repro.kernels.schedule import (SpmmPlan, _lpt_pack, bsr_stats,
-                                    plan_spmm)
+from repro.kernels.schedule import (SpmmPlan, _default_chunk, _lpt_pack,
+                                    bsr_stats, plan_spmm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +84,16 @@ class PartitionedSpmmPlan:
     * ``row_shard`` — ``(gm,)`` primary owner device per block-row (``-1``
       for empty rows); ``split_rows`` lists rows owned by more than one
       device (non-empty only when ``device_chunk`` split a heavy row —
-      the only rows whose merge actually accumulates).
+      the only rows whose merge actually accumulates);
+    * ``n_col_shards`` — extent of the second mesh axis (``COL_AXIS``)
+      the dense operand's N dimension is panel-split over at execution
+      time.  Purely an execution-layout knob: the stacked metadata is
+      identical for every column device (the block pattern does not
+      depend on N), so ``1`` leaves the arrays bit-identical to a 1-D
+      plan;
+    * ``shard_steps`` / ``shard_r_max`` — each shard's **pre-pad**
+      geometry, recorded before the stack pads everyone to the heaviest
+      shard (``padding_waste`` is derived from these).
 
     ``shards`` keeps the unpadded per-shard plans for inspection
     (``predicted_cycles`` per device, tests).
@@ -94,6 +114,9 @@ class PartitionedSpmmPlan:
     block_m: int
     block_k: int
     stats: SpGEMMStats        # global workload stats (one source of truth)
+    n_col_shards: int = 1
+    shard_steps: Tuple[int, ...] = ()
+    shard_r_max: Tuple[int, ...] = ()
 
     # partitioned execution is compact-layout by definition: shard outputs
     # must be disjoint per-device tiles; the rmw read-modify-write of a
@@ -115,6 +138,32 @@ class PartitionedSpmmPlan:
     @property
     def slot_cap(self) -> int:
         return self.gather.shape[1]
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of issued per-device ``(lane, step)`` kernel slots
+        that exist only because of the SPMD pad to the heaviest shard's
+        ``steps`` — the whole mesh runs the stacked geometry, so a shard
+        ``k`` steps lighter than the slowest one idles ``k * n_lanes``
+        slots every call.  ``0.0`` when every shard planned to the same
+        makespan (uniform patterns land here); the repack pass exists to
+        push skewed patterns toward it.  Within-shard lane bubbles are a
+        different number (``SpmmPlan.utilization``)."""
+        smax = self.steps
+        pre = self.shard_steps or tuple(p.steps for p in self.shards)
+        return sum(smax - s for s in pre) / max(self.n_shards * smax, 1)
+
+    def dense_operand_bytes(self, n_cols: int, *, g: int = 1,
+                            itemsize: int = 4) -> int:
+        """Per-device bytes of the dense operand B one ``(shard, col)``
+        device holds: all K rows × its N column panel.  With
+        ``n_col_shards == 1`` this is the full replicated B — the 1-D
+        memory wall the column axis exists to break (the executor's
+        ``bn``-tile rounding of the panel is ignored here; this prices
+        capacity, not traffic)."""
+        k = self.stats.n_cols * self.block_k       # stats rows are blocks
+        panel = -(-int(n_cols) // self.n_col_shards)
+        return int(g) * k * panel * itemsize
 
     def per_shard_cycles(self) -> List[float]:
         """Each device's realized lane makespan (the per-device predicted
@@ -172,11 +221,123 @@ def _shard_pattern(a: BlockCSR, items: List[Tuple[int, int, int]],
     return pattern, gather, live
 
 
+def _planned_steps(row_counts: Dict[int, int], n_lanes: int,
+                   chunk: Optional[int], row_atomic: bool) -> int:
+    """Exact ``steps`` of the plan ``_shard_pattern`` + ``plan_spmm``
+    would build for a device owning these per-row block counts — without
+    building it.  Replicates the planner's own chunk resolution
+    (``_default_chunk`` over the *shard's* nnzb), chunk split offsets
+    (cumsum over ascending rows — the shard-local compaction order), sort
+    tie-breaks, and LPT, so the repack objective is the realized stacked
+    geometry, not a proxy for it."""
+    nnzb = sum(row_counts.values())
+    if nnzb <= 0:
+        return 1
+    eff = None if row_atomic else (
+        chunk if chunk is not None else _default_chunk(nnzb, n_lanes))
+    chunks: List[Tuple[int, int, int]] = []
+    lo = 0
+    for row in sorted(row_counts):
+        hi = lo + row_counts[row]
+        if row_atomic:
+            chunks.append((row, lo, hi))
+        else:
+            for s in range(lo, hi, eff):
+                chunks.append((row, s, min(s + eff, hi)))
+        lo = hi
+    chunks.sort(key=lambda c: (-(c[2] - c[1]), c[0], c[1]))
+    _, loads = _lpt_pack([(c[2] - c[1], c) for c in chunks], n_lanes)
+    return max(1, int(loads.max()))
+
+
+def _repack_devices(device_items: List[List[Tuple[int, int, int]]], *,
+                    n_lanes: int, chunk: Optional[int], row_atomic: bool,
+                    max_rounds: int = 32,
+                    max_evals_per_round: int = 512,
+                    ) -> List[List[Tuple[int, int, int]]]:
+    """Padding-aware repack: greedy local search over item moves/swaps
+    that minimizes the lexicographic objective
+    ``(max steps-after-chunking, SPMD pad slots)``.
+
+    Raw-block-count LPT levels *total* work, but devices pay **plan
+    steps** — the per-shard lane makespan after chunk splitting, whose
+    quantization (chunk ceil, per-shard ``_default_chunk`` resolution,
+    LPT packing slack) count-LPT cannot see — and the stacked geometry
+    pads every shard to the slowest one, so one step of wobble taxes the
+    whole mesh.  Candidate edits: move an item off a critical shard, or
+    swap it against a strictly lighter item elsewhere (the classic fix
+    for LPT's non-optimal endgame).  First improvement wins; fully
+    deterministic; cost bounded by the round/eval caps (the search runs
+    once per pattern at plan-build time, host-side)."""
+    d_ = len(device_items)
+    if d_ <= 1:
+        return device_items
+    items = [list(dev) for dev in device_items]
+
+    def steps_of(dev: List[Tuple[int, int, int]]) -> int:
+        counts: Dict[int, int] = {}
+        for (row, lo, hi) in dev:
+            counts[row] = counts.get(row, 0) + (hi - lo)
+        return _planned_steps(counts, n_lanes, chunk, row_atomic)
+
+    def objective(st: List[int]) -> Tuple[int, int]:
+        smax = max(st)
+        return (smax, sum(smax - s for s in st))
+
+    steps = [steps_of(dev) for dev in items]
+    for _ in range(max_rounds):
+        cur = objective(steps)
+        smax = max(steps)
+        evals = 0
+        improved = False
+        for src in range(d_):
+            if steps[src] != smax or improved:
+                continue
+            src_items = sorted(items[src],
+                               key=lambda c: (-(c[2] - c[1]), c[0], c[1]))
+            dsts = sorted((d for d in range(d_) if d != src),
+                          key=lambda d: (steps[d], d))
+            for it in src_items:
+                if improved or evals >= max_evals_per_round:
+                    break
+                w_it = it[2] - it[1]
+                for dst in dsts:
+                    if improved or evals >= max_evals_per_round:
+                        break
+                    # a plain move, then swaps against lighter dst items
+                    backs: List[Optional[Tuple[int, int, int]]] = [None]
+                    backs += sorted(
+                        (j for j in items[dst] if (j[2] - j[1]) < w_it),
+                        key=lambda c: (c[2] - c[1], c[0], c[1]))
+                    for back in backs:
+                        new_src = [x for x in items[src] if x != it]
+                        new_dst = items[dst] + [it]
+                        if back is not None:
+                            new_dst = [x for x in new_dst if x != back]
+                            new_src = new_src + [back]
+                        st = list(steps)
+                        st[src] = steps_of(new_src)
+                        st[dst] = steps_of(new_dst)
+                        evals += 1
+                        if objective(st) < cur:
+                            items[src], items[dst] = new_src, new_dst
+                            steps = st
+                            improved = True
+                            break
+                        if evals >= max_evals_per_round:
+                            break
+        if not improved:
+            break
+    return items
+
+
 def plan_partitioned_spmm(a: BlockCSR, *, n_shards: int,
                           n_lanes: int = 8,
                           chunk: Optional[int] = None,
                           device_chunk: Optional[int] = None,
-                          row_atomic: bool = False) -> PartitionedSpmmPlan:
+                          row_atomic: bool = False,
+                          n_col_shards: int = 1,
+                          repack: bool = True) -> PartitionedSpmmPlan:
     """Partition ``a``'s block-rows across ``n_shards`` devices and plan
     each shard with the existing lane scheduler.
 
@@ -188,10 +349,24 @@ def plan_partitioned_spmm(a: BlockCSR, *, n_shards: int,
     ``n_lanes`` / ``chunk`` / ``row_atomic`` are the per-shard lane knobs,
     passed straight to :func:`plan_spmm`.
 
+    ``n_col_shards`` adds the second mesh axis: at execution time the
+    dense operand's N dimension splits into that many per-device column
+    panels (``COL_AXIS``) instead of replicating B on every shard.  It
+    does not change the stacked metadata at all — ``n_col_shards=1``
+    plans are bit-identical to pre-2-D plans.
+
+    ``repack`` (default on) runs the padding-aware repack after the
+    count-LPT: device items are traded until no move/swap lowers the
+    ``(max steps-after-chunking, pad slots)`` objective — the stacked
+    geometry then tracks the *balanced* shard rather than the unluckiest
+    one (see :attr:`PartitionedSpmmPlan.padding_waste`).
+
     Host-side over metadata; raises on traced metadata like every planner.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards={n_shards} < 1")
+    if n_col_shards < 1:
+        raise ValueError(f"n_col_shards={n_col_shards} < 1")
     if device_chunk is not None and device_chunk < 1:
         raise ValueError(f"device_chunk={device_chunk} < 1")
     rptr = np.asarray(a.row_ptr).astype(np.int64)
@@ -212,6 +387,11 @@ def plan_partitioned_spmm(a: BlockCSR, *, n_shards: int,
     # 2. LPT across devices — longest item first onto the lightest device
     items.sort(key=lambda c: (-(c[2] - c[1]), c[0], c[1]))
     device_items, _ = _lpt_pack([(c[2] - c[1], c) for c in items], n_shards)
+    if repack and n_shards > 1:
+        # padding-aware refinement: the stacked geometry pays max
+        # steps-after-chunking, which count-LPT cannot see
+        device_items = _repack_devices(device_items, n_lanes=n_lanes,
+                                       chunk=chunk, row_atomic=row_atomic)
     for lane in device_items:
         lane.sort(key=lambda c: (c[0], c[1]))
 
@@ -268,7 +448,9 @@ def plan_partitioned_spmm(a: BlockCSR, *, n_shards: int,
         flush_slot=flush_slot, slot_row=slot_row,
         row_shard=row_shard, split_rows=split, r_max=r_max,
         n_block_rows=gm, block_m=a.block_shape[0], block_k=a.block_shape[1],
-        stats=bsr_stats(a))
+        stats=bsr_stats(a), n_col_shards=n_col_shards,
+        shard_steps=tuple(p.steps for p in shards),
+        shard_r_max=tuple(p.r_max for p in shards))
 
 
 def plan_partitioned_spmm_vjp(a: BlockCSR, *, n_shards: int,
@@ -276,28 +458,46 @@ def plan_partitioned_spmm_vjp(a: BlockCSR, *, n_shards: int,
                               chunk: Optional[int] = None,
                               device_chunk: Optional[int] = None,
                               row_atomic: bool = False,
+                              n_col_shards: int = 1,
+                              repack: bool = True,
                               fwd: Optional[PartitionedSpmmPlan] = None):
-    """Partitioned forward plan + re-partitioned transpose-side plan.
+    """Partitioned forward plan + fully partitioned backward.
 
     Returns a :class:`~repro.kernels.schedule.SpmmTrainPlan` whose ``fwd``
     and ``bwd`` are :class:`PartitionedSpmmPlan` s — the ``dB = A^T @ dC``
     backward **re-partitions on the transposed block pattern** (A^T's
     block-rows are A's block-columns, so the forward's row split is
-    useless there; the transpose side runs its own LPT over A^T rows).
-    The dA block SDDMM stays single-device for now (it is
-    pattern-gathered, not row-partitioned — see ROADMAP open items).
-    Everything else (payload transpose gather, SDDMM metadata) rides the
-    shared :func:`~repro.kernels.schedule.transpose_train_plan` tail, so
-    the transpose-side conventions cannot drift from ``plan_spmm_vjp``.
+    useless there; the transpose side runs its own LPT over A^T rows) and
+    inherits the forward's ``n_col_shards`` (dC carries the same N axis
+    the forward's output did, so the same column panels apply).  The dA
+    block SDDMM backward is partitioned too — but over the *forward*
+    plan's ownership, not a plan of its own: each shard computes the dA
+    blocks its ``gather`` map owns (dC rows follow the forward's row
+    split), each column device contributes its N-panel's partial and the
+    ``COL_AXIS`` psum completes the contraction — see
+    ``ops._partitioned_sddmm_f32``.  Everything else (payload transpose
+    gather, SDDMM metadata) rides the shared
+    :func:`~repro.kernels.schedule.transpose_train_plan` tail, so the
+    transpose-side conventions cannot drift from ``plan_spmm_vjp``.
     """
     from repro.kernels.schedule import transpose_train_plan
 
     if fwd is None:
         fwd = plan_partitioned_spmm(a, n_shards=n_shards, n_lanes=n_lanes,
                                     chunk=chunk, device_chunk=device_chunk,
-                                    row_atomic=row_atomic)
+                                    row_atomic=row_atomic,
+                                    n_col_shards=n_col_shards,
+                                    repack=repack)
+    elif fwd.n_col_shards != n_col_shards and n_col_shards != 1:
+        raise ValueError(
+            f"n_col_shards={n_col_shards} but the prebuilt fwd plan "
+            f"carries {fwd.n_col_shards} column panels — build them "
+            f"together, or drop one")
+    # the transpose side re-partitions, but always onto the forward's mesh
+    # shape — mixed-mesh fwd/bwd would need two meshes at execution time
     return transpose_train_plan(
         a, fwd,
         lambda at: plan_partitioned_spmm(
-            at, n_shards=n_shards, n_lanes=n_lanes, chunk=chunk,
-            device_chunk=device_chunk, row_atomic=row_atomic))
+            at, n_shards=fwd.n_shards, n_lanes=n_lanes, chunk=chunk,
+            device_chunk=device_chunk, row_atomic=row_atomic,
+            n_col_shards=fwd.n_col_shards, repack=repack))

@@ -462,6 +462,7 @@ def _chunk_candidates(row_lens: np.ndarray, n_lanes: int) -> List[Optional[int]]
 
 def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
                     shard_counts: Sequence[int] = (1,),
+                    col_shard_counts: Sequence[int] = (1,),
                     fused_layouts: Sequence[str] = ("rmw", "compact"),
                     ) -> List[Dict]:
     """Enumerate the discrete SpMM schedule knob space for one pattern.
@@ -471,10 +472,15 @@ def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
     (:func:`_chunk_candidates`; ``None`` = planner default), ``row_atomic``
     (atomic configs carry ``chunk=None`` — the conflicting combination
     raises in :func:`plan_spmm`), ``fused`` layout preference, and the
-    device axis ``n_shards`` / ``device_chunk`` (searched only for entries
-    of ``shard_counts`` > 1; ``device_chunk`` offers ``None`` = whole rows
-    plus one half-balanced-shard bound when a row overflows the balanced
-    shard).  Deterministic order — the autotuner's tie-break and seeding
+    device axes ``n_shards`` / ``n_col_shards`` / ``device_chunk``
+    (searched only for entries of ``shard_counts`` > 1; ``device_chunk``
+    offers ``None`` = whole rows plus one half-balanced-shard bound when
+    a row overflows the balanced shard; ``col_shard_counts`` varies the
+    dense-operand column axis and, being schedule-neutral — predicted
+    cycles are per-output-column-tile, so the makespan does not depend on
+    the column split — exists so a caller can *pin* the memory layout,
+    with single-device entries always at ``n_col_shards=1``).
+    Deterministic order — the autotuner's tie-break and seeding
     contract depends on it.  Not enumerated (documented in
     kernels/README.md): the block shape (a *container* property — changing
     it reshapes the operand), ``bn`` (an execution tile, not a schedule
@@ -500,20 +506,27 @@ def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
                 dev_chunks.append(half)
         # partitioned execution is compact-layout by definition (shard
         # outputs are disjoint per-device tiles), so the fused knob only
-        # varies on the single-device axis
+        # varies on the single-device axis; likewise the column axis only
+        # exists on the partitioned schedule
         layouts = fused_layouts if n_shards == 1 else ("compact",)
-        for device_chunk in dev_chunks:
-            for n_lanes in lanes_all:
-                for fused in layouts:
-                    cfgs.append(dict(n_lanes=n_lanes, chunk=None,
-                                     row_atomic=True, fused=fused,
-                                     n_shards=n_shards,
-                                     device_chunk=device_chunk))
-                    for chunk in _chunk_candidates(row_lens, n_lanes):
-                        cfgs.append(dict(n_lanes=n_lanes, chunk=chunk,
-                                         row_atomic=False, fused=fused,
+        col_counts = [1] if n_shards == 1 else list(col_shard_counts)
+        for n_col_shards in col_counts:
+            if n_col_shards < 1:
+                raise ValueError(f"col shard count {n_col_shards} < 1")
+            for device_chunk in dev_chunks:
+                for n_lanes in lanes_all:
+                    for fused in layouts:
+                        cfgs.append(dict(n_lanes=n_lanes, chunk=None,
+                                         row_atomic=True, fused=fused,
                                          n_shards=n_shards,
+                                         n_col_shards=n_col_shards,
                                          device_chunk=device_chunk))
+                        for chunk in _chunk_candidates(row_lens, n_lanes):
+                            cfgs.append(dict(n_lanes=n_lanes, chunk=chunk,
+                                             row_atomic=False, fused=fused,
+                                             n_shards=n_shards,
+                                             n_col_shards=n_col_shards,
+                                             device_chunk=device_chunk))
     return cfgs
 
 
@@ -582,6 +595,7 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
                   row_atomic: bool = False,
                   fused: str = "auto",
                   n_shards: Optional[int] = None,
+                  n_col_shards: Optional[int] = None,
                   fwd: Optional[SpmmPlan] = None) -> SpmmTrainPlan:
     """Build the forward plan and cache the transpose-side plan with it.
 
@@ -598,9 +612,13 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
     backward **re-partitioned on the transposed block pattern**
     (``kernels.partition.plan_partitioned_spmm_vjp`` — A^T's block-rows
     are A's block-columns, so the forward's row split does not carry
-    over).  ``None``/``1`` keeps the single-device schedules.
+    over).  ``n_col_shards`` adds the dense-operand column axis to both
+    sides and lifts the dA SDDMM onto the same 2-D mesh
+    (``ops._partitioned_sddmm_f32``).  ``None``/``1`` keeps the
+    single-device schedules (``n_col_shards>1`` requires a sharded plan).
     """
-    if n_shards is not None and n_shards > 1:
+    if (n_shards is not None and n_shards > 1) or \
+            (n_col_shards is not None and n_col_shards > 1):
         # lazy import: partition builds on this module
         from repro.kernels.partition import (PartitionedSpmmPlan,
                                              plan_partitioned_spmm_vjp)
@@ -610,9 +628,10 @@ def plan_spmm_vjp(a: BlockCSR, *, n_lanes: int = 8,
                 "n_shards>1 needs a partitioned fwd plan; the one passed "
                 "is single-device — build it with plan_partitioned_spmm, "
                 "or drop fwd to re-plan here")
-        return plan_partitioned_spmm_vjp(a, n_shards=n_shards,
-                                         n_lanes=n_lanes, chunk=chunk,
-                                         row_atomic=row_atomic, fwd=fwd)
+        return plan_partitioned_spmm_vjp(
+            a, n_shards=n_shards if n_shards is not None else 1,
+            n_col_shards=n_col_shards if n_col_shards is not None else 1,
+            n_lanes=n_lanes, chunk=chunk, row_atomic=row_atomic, fwd=fwd)
     if fwd is None:
         fwd = plan_spmm(a, n_lanes=n_lanes, chunk=chunk,
                         row_atomic=row_atomic, fused=fused)

@@ -608,8 +608,13 @@ def sparse_linear(w: BlockCSR, x, *, plan=None, bn: int = 128,
     Multi-device: a ``PartitionedSpmmPlan`` (``plan_partitioned_spmm``,
     or ``plan_spmm_vjp(..., n_shards=D)`` for training) runs the layer
     sharded over ``D`` devices — each device owns a slice of ``W``'s
-    block-rows (= output features) under ``shard_map``; activations stay
-    replicated.  ``schedule="partitioned"`` does the same eagerly.
+    block-rows (= output features) under ``shard_map``.  Activations are
+    replicated on the 1-D mesh; a plan built with ``n_col_shards=C > 1``
+    instead panel-splits them along the token axis over a second
+    ``"col"`` mesh axis (per-device activation bytes shrink ~``C``×, the
+    output panels reassemble by placement, and the dA SDDMM backward
+    partitions over the same 2-D mesh).  ``schedule="partitioned"`` does
+    the same eagerly.
     """
     from repro.kernels import maple_spmm  # local: keep layers importable
     # without pulling pallas in for dense-only models

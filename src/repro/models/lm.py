@@ -208,7 +208,8 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 
 
 def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
-                    n_shards=None, autotune: bool = False):
+                    n_shards=None, n_col_shards=None,
+                    autotune: bool = False):
     """Build the shared ``SpmmTrainPlan`` for a sparse-MLP model.
 
     Every sparse layer shares the mask (``cfg.sparse_mask_seed``), so one
@@ -222,6 +223,10 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
     block-rows per device; the backward re-partitions on the transposed
     pattern) so the train step runs the sparse layers multi-device —
     pass ``len(jax.local_devices())`` to use every local device.
+    ``n_col_shards > 1`` adds the second mesh axis: activations are
+    panel-split along their N (token) dimension instead of replicated on
+    every shard, and the dA SDDMM backward partitions over the same 2-D
+    mesh (see ``kernels.partition``).
 
     ``autotune=True`` replaces the hand-tuned ``n_lanes``/``chunk`` with
     a budgeted ``kernels.autotune`` search over the mask's pattern
@@ -242,9 +247,10 @@ def sparse_mlp_plan(params, *, n_lanes: int = 8, chunk=None,
         w = jax.tree_util.tree_map(lambda a: a[0], w)
     if autotune:
         from repro.kernels.autotune import auto_plan
-        return auto_plan(w, trainable=True, n_shards=n_shards)
+        return auto_plan(w, trainable=True, n_shards=n_shards,
+                         n_col_shards=n_col_shards)
     return plan_spmm_vjp(w, n_lanes=n_lanes, chunk=chunk,
-                         n_shards=n_shards)
+                         n_shards=n_shards, n_col_shards=n_col_shards)
 
 
 # --------------------------------------------------------------------------

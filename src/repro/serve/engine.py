@@ -47,6 +47,11 @@ class SparseLogitHead:
     applied to the widest matmul serving runs.  Pass
     ``len(jax.local_devices())`` to use every local device; the same
     head still works on a 1-device box (stacked loop, identical result).
+    ``n_col_shards=C`` adds the second mesh axis: the hidden-state
+    activations — long-sequence serving's memory wall — are panel-split
+    along their token dimension instead of replicated on every shard,
+    cutting per-device dense-operand bytes ~``C``× (the logits panels
+    reassemble by placement, no collective).
     """
 
     weight: BlockCSR         # (vocab, d_model) block-sparse
@@ -55,13 +60,16 @@ class SparseLogitHead:
     @classmethod
     def build(cls, weight: BlockCSR, *, n_lanes: int = 8,
               chunk: int | None = None, n_shards: int | None = None,
+              n_col_shards: int | None = None,
               trainable: bool = False,
               plan: str | None = None) -> "SparseLogitHead":
         """``plan="auto"`` replaces the hand-tuned knobs with a budgeted
         ``kernels.autotune`` search over the head's sparsity pattern
         (memoized — rebuilding a head for a seen pattern never replans);
-        ``n_shards`` then bounds the searched device axis and
-        ``n_lanes``/``chunk`` are ignored (the search owns them)."""
+        ``n_shards`` then bounds the searched device axis,
+        ``n_col_shards`` pins the column split (a memory layout, never
+        searched), and ``n_lanes``/``chunk`` are ignored (the search
+        owns them)."""
         if plan is not None:
             if plan != "auto":
                 raise ValueError(f"unknown plan {plan!r}; only 'auto' "
@@ -69,13 +77,16 @@ class SparseLogitHead:
             from repro.kernels.autotune import auto_plan
             return cls(weight=weight,
                        plan=auto_plan(weight, trainable=trainable,
-                                      n_shards=n_shards))
+                                      n_shards=n_shards,
+                                      n_col_shards=n_col_shards))
+        col = n_col_shards if n_col_shards is not None else 1
         if trainable:
             plan = plan_spmm_vjp(weight, n_lanes=n_lanes, chunk=chunk,
-                                 n_shards=n_shards)
-        elif n_shards is not None and n_shards > 1:
-            plan = plan_partitioned_spmm(weight, n_shards=n_shards,
-                                         n_lanes=n_lanes, chunk=chunk)
+                                 n_shards=n_shards, n_col_shards=n_col_shards)
+        elif (n_shards is not None and n_shards > 1) or col > 1:
+            plan = plan_partitioned_spmm(
+                weight, n_shards=n_shards if n_shards is not None else 1,
+                n_lanes=n_lanes, chunk=chunk, n_col_shards=col)
         else:
             plan = plan_spmm(weight, n_lanes=n_lanes, chunk=chunk)
         return cls(weight=weight, plan=plan)

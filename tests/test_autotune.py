@@ -150,6 +150,25 @@ def test_different_search_params_are_distinct_cache_lines():
     assert plan_cache_stats()["size"] == 3
 
 
+def test_mesh_shape_is_part_of_the_cache_key():
+    """Same fingerprint, different device geometry → distinct cache
+    lines.  A 2-D request must never be served a cached 1-D plan (and
+    vice versa): the cached object's shard/col layout is baked into its
+    stacked metadata."""
+    _, a = _bsr("uniform")
+    p1 = plan_search(a, budget=8, shard_counts=(2,))
+    p2 = plan_search(a, budget=8, shard_counts=(2,), col_shard_counts=(2,))
+    assert p1 is not p2
+    assert p1.n_col_shards == 1
+    assert p2.n_col_shards == 2
+    assert plan_cache_stats()["size"] == 2
+    # repeat requests hit their own lines
+    assert plan_search(a, budget=8, shard_counts=(2,)) is p1
+    assert plan_search(a, budget=8, shard_counts=(2,),
+                       col_shard_counts=(2,)) is p2
+    assert plan_cache_stats()["size"] == 2
+
+
 @pytest.mark.parametrize("kind", ["uniform", "power_law", "banded",
                                   "empty_rows"])
 def test_autotuned_never_worse_than_default(kind):

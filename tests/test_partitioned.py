@@ -163,7 +163,8 @@ def test_validation():
         plan_partitioned_spmm(a, n_shards=0)
     with pytest.raises(ValueError, match="device_chunk"):
         plan_partitioned_spmm(a, n_shards=2, device_chunk=0)
-    with pytest.raises(ValueError, match="n_shards only applies"):
+    with pytest.raises(ValueError, match="n_shards(/n_col_shards)? only "
+                                         "applies"):
         maple_spmm(a, jnp.zeros((32, 16), jnp.float32), bn=16,
                    schedule="balanced", n_shards=2)
     # plan/operand mismatch: gather indexes past a thinner operand

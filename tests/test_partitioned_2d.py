@@ -1,0 +1,350 @@
+"""2-D mesh partitioned SpMM tests: the ``("shard", "col")`` mesh.
+
+Covers the tentpole contracts of the 2-D layout:
+
+* ``n_col_shards=1`` plans and execution are **bit-identical** to the 1-D
+  path (the column axis is purely an execution layout);
+* 2-D execution (any mesh shape) is bit-identical to the stacked
+  single-device loop and matches the dense oracle, forward and backward;
+* the partitioned dA SDDMM backward reproduces the single-device SDDMM
+  oracle **bit-exactly** at ``n_col_shards=1`` under a fixed cotangent
+  (placement merge, no re-rounding) and to f32 tolerance for ``C > 1``
+  (the COL_AXIS psum regroups the N-contraction);
+* ``padding_waste`` is 0 for uniform patterns, the repack pass never
+  makes the ``(steps, waste)`` objective worse and strictly improves a
+  pinned skewed fixture;
+* ``partition_mesh`` reuses a bound mesh carrying the requested axes and
+  raises (never a silent local fallback) on axis-size mismatches.
+
+The ``multi-device`` CI matrix runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` with
+``MAPLE_TEST_MESH`` set to ``8x1`` / ``4x2`` / ``2x4``; locally a default
+shape list is used and mesh-path tests skip when the box is too small.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.csr import BlockCSR
+from repro.distributed.sharding import (COL_AXIS, PARTITION_AXIS,
+                                        local_partition_execution,
+                                        partition_mesh, use_mesh_rules)
+from repro.kernels import (maple_spmm, plan_partitioned_spmm,
+                           plan_partitioned_spmm_vjp, plan_spmm_vjp)
+from repro.kernels.autotune import _plans_bit_identical
+
+pytestmark = pytest.mark.tier1
+
+N_DEV = len(jax.local_devices())
+
+
+def _mesh_env():
+    v = os.environ.get("MAPLE_TEST_MESH", "")
+    if not v:
+        return None
+    d, c = v.lower().split("x")
+    return int(d), int(c)
+
+# the CI matrix pins one shape per job via MAPLE_TEST_MESH; local runs
+# sweep a default list (shapes beyond the local device count skip)
+MESH_SHAPES = [_mesh_env()] if _mesh_env() else [(8, 1), (4, 2), (2, 4)]
+
+
+# --------------------------------------------------------------------------
+# fixtures (same conventions as test_partitioned.py)
+# --------------------------------------------------------------------------
+
+def _pattern(rng, gm, gk, kind):
+    if kind == "uniform":
+        mask = rng.random((gm, gk)) < 0.4
+    elif kind == "power_law":
+        mask = np.zeros((gm, gk), bool)
+        for i in range(gm):
+            ln = max(1, int(round(gk * (i + 1) ** -1.3)))
+            mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    elif kind == "banded":
+        mask = np.abs(np.subtract.outer(np.arange(gm),
+                                        np.arange(gk))) <= 1
+    else:
+        raise ValueError(kind)
+    return mask
+
+
+def _bsr(rng, mask, bm=8, bk=8, extra_pad=0):
+    gm, gk = mask.shape
+    d = rng.standard_normal((gm * bm, gk * bk)).astype(np.float32)
+    d *= np.repeat(np.repeat(mask, bm, 0), bk, 1)
+    nnzb = int(mask.sum())
+    return d, BlockCSR.from_dense(d, (bm, bk),
+                                  n_blocks_max=max(nnzb, 1) + extra_pad)
+
+
+def _pareto_bsr(seed, gm=20, gk=16, bm=4, bk=4):
+    """Skewed row lengths — the workload the repack pass exists for."""
+    rng = np.random.default_rng(seed)
+    lens = np.minimum(np.maximum(
+        (rng.pareto(1.0, gm) * 2).astype(int) + 1, 1), gk)
+    mask = np.zeros((gm, gk), bool)
+    for i, ln in enumerate(lens):
+        mask[i, rng.choice(gk, size=ln, replace=False)] = True
+    return _bsr(rng, mask, bm=bm, bk=bk)
+
+
+def _pullback(a, plan, b, dc, bn=32):
+    """(dA.blocks, dB) of sum-free maple_spmm under a FIXED cotangent —
+    comparing backward paths without the forward's low-bit differences
+    leaking into ``dc``."""
+    f = lambda blocks, bb: maple_spmm(
+        BlockCSR(blocks=blocks, block_col=a.block_col,
+                 block_row=a.block_row, row_ptr=a.row_ptr,
+                 shape=a.shape, block_shape=a.block_shape),
+        bb, plan=plan, bn=bn)
+    _, vjp = jax.vjp(f, a.blocks, b)
+    return vjp(dc)
+
+
+# --------------------------------------------------------------------------
+# n_col_shards=1 ≡ the 1-D path, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "power_law", "banded"])
+def test_c1_plan_and_execution_bit_identical_to_1d(kind):
+    """A 2-D plan at C=1 is the 1-D plan: same stacked metadata, same
+    execution bits — the column axis costs nothing when unused."""
+    rng = np.random.default_rng(5)
+    mask = _pattern(rng, 12, 10, kind)
+    d, a = _bsr(rng, mask, extra_pad=2)
+    rng2 = np.random.default_rng(6)
+    b = jnp.asarray(rng2.standard_normal((a.shape[1], 48)).astype(np.float32))
+
+    p1d = plan_partitioned_spmm(a, n_shards=4, n_lanes=3)
+    p2d = plan_partitioned_spmm(a, n_shards=4, n_lanes=3, n_col_shards=1)
+    assert p2d.n_col_shards == 1
+    assert _plans_bit_identical(p1d, p2d)
+    o1 = np.asarray(maple_spmm(a, b, plan=p1d, bn=16))
+    o2 = np.asarray(maple_spmm(a, b, plan=p2d, bn=16))
+    assert np.array_equal(o1, o2)
+    np.testing.assert_allclose(o1, d @ np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# 2-D execution: mesh ≡ loop, and both match the dense oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES)
+@pytest.mark.parametrize("kind", ["uniform", "power_law"])
+def test_2d_forward_mesh_loop_bit_identical_and_dense(kind, mesh_shape):
+    """shard_map over the (shard, col) mesh ≡ the stacked single-device
+    loop bit-for-bit (panel concat is a placement; column tiles are
+    independent), and both match dense."""
+    d_, c_ = mesh_shape
+    if N_DEV < d_ * c_:
+        pytest.skip(f"needs {d_ * c_} devices, have {N_DEV}")
+    rng = np.random.default_rng(9)
+    mask = _pattern(rng, 12, 10, kind)
+    dense, a = _bsr(rng, mask, extra_pad=1)
+    # ragged N: not a multiple of n_col_shards * bn — exercises the
+    # executor's internal pad-to-panel + slice-back
+    b = jnp.asarray(rng.standard_normal((a.shape[1], 72)).astype(np.float32))
+
+    plan = plan_partitioned_spmm(a, n_shards=d_, n_col_shards=c_, n_lanes=4)
+    mesh_out = np.asarray(maple_spmm(a, b, plan=plan, bn=32))
+    with local_partition_execution():
+        loop_out = np.asarray(maple_spmm(a, b, plan=plan, bn=32))
+    assert np.array_equal(mesh_out, loop_out)
+    np.testing.assert_allclose(mesh_out, dense @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES)
+def test_2d_backward_mesh_loop_and_oracle(mesh_shape):
+    """Partitioned backward on the 2-D mesh: mesh ≡ loop bit-for-bit for
+    both grads; dA reproduces the single-device SDDMM oracle bit-exactly
+    at C=1 (pure placement merge) and to f32 tolerance for C>1 (the
+    COL_AXIS psum regroups the contraction); dB matches to tolerance
+    (its plan re-partitions the transposed pattern, so accumulation
+    grouping legitimately differs)."""
+    d_, c_ = mesh_shape
+    if N_DEV < d_ * c_:
+        pytest.skip(f"needs {d_ * c_} devices, have {N_DEV}")
+    rng = np.random.default_rng(13)
+    mask = _pattern(rng, 10, 8, "power_law")
+    _, a = _bsr(rng, mask, extra_pad=2)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], 64)).astype(np.float32))
+    dc = jnp.asarray(
+        rng.standard_normal((a.shape[0], 64)).astype(np.float32))
+
+    oracle = _pullback(a, plan_spmm_vjp(a), b, dc)
+    tp = plan_partitioned_spmm_vjp(a, n_shards=d_, n_col_shards=c_)
+    assert tp.fwd.n_col_shards == c_ and tp.bwd.n_col_shards == c_
+    mesh_g = _pullback(a, tp, b, dc)
+    with local_partition_execution():
+        loop_g = _pullback(a, tp, b, dc)
+
+    assert np.array_equal(np.asarray(mesh_g[0]), np.asarray(loop_g[0]))
+    assert np.array_equal(np.asarray(mesh_g[1]), np.asarray(loop_g[1]))
+    if c_ == 1:
+        assert np.array_equal(np.asarray(mesh_g[0]), np.asarray(oracle[0]))
+    else:
+        np.testing.assert_allclose(np.asarray(mesh_g[0]),
+                                   np.asarray(oracle[0]),
+                                   rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mesh_g[1]), np.asarray(oracle[1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_eager_2d_schedule_and_plan_crosschecks():
+    """maple_spmm(schedule="partitioned", n_col_shards=...) plans eagerly;
+    shard-count cross-checks against prebuilt plans raise on mismatch."""
+    rng = np.random.default_rng(21)
+    mask = _pattern(rng, 8, 8, "uniform")
+    dense, a = _bsr(rng, mask)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], 40)).astype(np.float32))
+    got = np.asarray(maple_spmm(a, b, schedule="partitioned", n_shards=2,
+                                n_col_shards=2, bn=32))
+    np.testing.assert_allclose(got, dense @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+    plan = plan_partitioned_spmm(a, n_shards=2, n_col_shards=2)
+    with pytest.raises(ValueError, match="column shards"):
+        maple_spmm(a, b, plan=plan, n_col_shards=4)
+    with pytest.raises(ValueError, match="column panels"):
+        plan_partitioned_spmm_vjp(a, n_shards=2, n_col_shards=4, fwd=plan)
+    # plan_spmm_vjp routes n_col_shards>1 through the partitioned builder
+    tp = plan_spmm_vjp(a, n_shards=2, n_col_shards=2)
+    assert tp.fwd.n_col_shards == 2
+
+
+# --------------------------------------------------------------------------
+# padding waste + repack
+# --------------------------------------------------------------------------
+
+def test_padding_waste_zero_for_uniform_pattern():
+    """Constant row length, rows divisible by shards → every shard plans
+    the same makespan → zero SPMD pad, repack or not."""
+    gm, gk = 16, 12
+    mask = np.zeros((gm, gk), bool)
+    mask[:, :4] = True                      # every row exactly 4 blocks
+    rng = np.random.default_rng(0)
+    _, a = _bsr(rng, mask)
+    for repack in (False, True):
+        plan = plan_partitioned_spmm(a, n_shards=4, n_lanes=2,
+                                     repack=repack)
+        assert plan.padding_waste == 0.0
+        assert plan.shard_steps == (plan.steps,) * 4
+
+
+def test_plan_records_pre_pad_geometry():
+    """shard_steps / shard_r_max mirror the unpadded shard plans, steps
+    is their max, and padding_waste is the normalized pad slot count."""
+    _, a = _pareto_bsr(6)
+    plan = plan_partitioned_spmm(a, n_shards=4, n_lanes=4)
+    assert plan.shard_steps == tuple(p.steps for p in plan.shards)
+    assert plan.shard_r_max == tuple(p.r_max for p in plan.shards)
+    assert plan.steps == max(plan.shard_steps)
+    expect = sum(plan.steps - s for s in plan.shard_steps) \
+        / (plan.n_shards * plan.steps)
+    assert plan.padding_waste == pytest.approx(expect)
+
+
+def test_repack_strictly_improves_skewed_fixture():
+    """The pinned pareto fixture where count-LPT is steps-suboptimal:
+    repack drops the stacked makespan 6 → 5 and the waste to zero."""
+    _, a = _pareto_bsr(6)
+    p0 = plan_partitioned_spmm(a, n_shards=4, n_lanes=4, repack=False)
+    p1 = plan_partitioned_spmm(a, n_shards=4, n_lanes=4, repack=True)
+    assert p1.steps < p0.steps
+    assert p1.padding_waste < p0.padding_waste
+    assert p1.padding_waste == 0.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_repack_never_worse_and_stays_correct(seed):
+    """Property over random power-law patterns: repack never worsens the
+    lexicographic (steps, waste) objective, and the repacked plan still
+    computes the right product.  ``slow``: an 8-seed execution sweep —
+    runs in the tier1-slow and multi-device jobs, not the fast gate."""
+    dense, a = _pareto_bsr(seed)
+    rng = np.random.default_rng(seed + 100)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], 32)).astype(np.float32))
+    for d_ in (3, 4):
+        p0 = plan_partitioned_spmm(a, n_shards=d_, n_lanes=4, repack=False)
+        p1 = plan_partitioned_spmm(a, n_shards=d_, n_lanes=4, repack=True)
+        assert (p1.steps, p1.padding_waste) <= (p0.steps, p0.padding_waste)
+        got = np.asarray(maple_spmm(a, b, plan=p1, bn=32))
+        np.testing.assert_allclose(got, dense @ np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# dense-operand memory accounting
+# --------------------------------------------------------------------------
+
+def test_dense_operand_bytes_shrink_with_col_shards():
+    rng = np.random.default_rng(2)
+    mask = _pattern(rng, 8, 8, "uniform")
+    _, a = _bsr(rng, mask)
+    n = 256
+    p1 = plan_partitioned_spmm(a, n_shards=2, n_col_shards=1)
+    p4 = plan_partitioned_spmm(a, n_shards=2, n_col_shards=4)
+    assert p1.dense_operand_bytes(n) == a.shape[1] * n * 4
+    assert p4.dense_operand_bytes(n) * 4 == p1.dense_operand_bytes(n)
+    # ceil-divided panels for ragged N
+    assert p4.dense_operand_bytes(n + 1) == a.shape[1] * 65 * 4
+
+
+# --------------------------------------------------------------------------
+# partition_mesh: bound-mesh reuse + loud mismatch errors (satellite)
+# --------------------------------------------------------------------------
+
+def test_partition_mesh_validates_requests():
+    with pytest.raises(ValueError, match="n_col_shards"):
+        partition_mesh(2, 0)
+    assert partition_mesh(1, 1) == (None, None)
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices")
+def test_partition_mesh_reuses_bound_2d_mesh():
+    devs = np.asarray(jax.local_devices()[:4]).reshape(2, 2)
+    bound = Mesh(devs, (PARTITION_AXIS, COL_AXIS))
+    with use_mesh_rules(bound):
+        mesh, axes = partition_mesh(2, 2)
+        assert mesh is bound
+        assert axes == (PARTITION_AXIS, COL_AXIS)
+        # a 1-D request on the same bound mesh reuses it too (the col
+        # axis is simply not shard_mapped over)
+        mesh1, axis1 = partition_mesh(2)
+        assert mesh1 is bound and axis1 == PARTITION_AXIS
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices")
+def test_partition_mesh_raises_on_bound_mismatch():
+    devs = np.asarray(jax.local_devices()[:4]).reshape(2, 2)
+    bound = Mesh(devs, (PARTITION_AXIS, COL_AXIS))
+    with use_mesh_rules(bound):
+        with pytest.raises(ValueError, match="n_shards=4"):
+            partition_mesh(4)
+        with pytest.raises(ValueError, match="n_col_shards=4"):
+            partition_mesh(2, 4)
+    flat = Mesh(np.asarray(jax.local_devices()[:2]), (PARTITION_AXIS,))
+    with use_mesh_rules(flat):
+        with pytest.raises(ValueError, match="no 'col' axis"):
+            partition_mesh(2, 2)
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs >= 2 devices")
+def test_partition_mesh_private_fallback_without_partition_axis():
+    """A bound mesh that never reserved PARTITION_AXIS is somebody
+    else's mesh — partition_mesh builds its own private one."""
+    bound = Mesh(np.asarray(jax.local_devices()[:2]), ("data",))
+    with use_mesh_rules(bound):
+        mesh, axis = partition_mesh(2)
+        assert mesh is not bound
+        assert axis == PARTITION_AXIS
+        assert dict(mesh.shape) == {PARTITION_AXIS: 2}
