@@ -425,6 +425,66 @@ def attention_decode(p, cfg: AttnConfig, x, cache_k, cache_v, pos):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
 
 
+def attention_decode_paged(p, cfg: AttnConfig, x, pool_k, pool_v, table,
+                           pos):
+    """One fused decode step against a *paged* KV pool (vLLM-style).
+
+    x: (B, 1, D) — one new token per batch slot; B is the engine's slot
+    count, not a request count.  pool_k/v: (n_pages, P, KVH, hd) — the
+    physical page pool shared by every slot (page 0 is the sacrificial
+    dead page free slots write into).  table: (B, max_pages) int32 —
+    per-slot block table mapping logical page ``t // P`` to a physical
+    page.  pos: (B,) int32 — per-slot absolute decode position (the slot
+    this token is written to), so slots at *different* sequence depths
+    share one fused step.
+
+    Pages keep tokens in logical order (no rolling layout): local-window
+    masking happens at read time, and the serving engine frees pages that
+    fall entirely behind the window instead.  Reads gather the slot's
+    pages back into a (B, max_pages·P, KVH, hd) view; entries past the
+    slot's position (or outside its window) are masked to -inf exactly
+    like the static cache path, so a gathered page holding a previous
+    occupant's stale tokens can never contribute (softmax weight exactly
+    0.0).  Returns (out, new_pool_k, new_pool_v).
+    """
+    n_pages, psize = pool_k.shape[0], pool_k.shape[1]
+    positions = pos[:, None].astype(jnp.int32)              # (B, 1)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    page_idx = pos // psize
+    off = pos % psize
+    phys = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]
+    pool_k = pool_k.at[phys, off].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v_new[:, 0].astype(pool_v.dtype))
+
+    gk = pool_k[table]                  # (B, max_pages, P, KVH, hd)
+    gv = pool_v[table]
+    b = x.shape[0]
+    s_len = gk.shape[1] * psize
+    gk = gk.reshape(b, s_len, cfg.n_kv_heads, cfg.head_dim)
+    gv = gv.reshape(b, s_len, cfg.n_kv_heads, cfg.head_dim)
+
+    idx = jnp.arange(s_len)[None, :]                        # logical pos
+    valid = idx <= pos[:, None]
+    if cfg.window is not None:
+        valid &= idx > (pos[:, None] - cfg.window)
+
+    # grouped-query attention without materializing head-repeated K/V
+    # (same dataflow as attention_decode; the mask is per-row here)
+    kvh = cfg.n_kv_heads
+    grp = cfg.n_heads // kvh
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qg = q.reshape(b, 1, kvh, grp, cfg.head_dim)
+    s = jnp.einsum("bqkgh,bskh->bkgqs",
+                   qg.astype(jnp.float32) * scale,
+                   gk.astype(jnp.float32))                  # (B,KV,G,1,S)
+    s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, gv.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), pool_k, pool_v
+
+
 def attention_prefill(p, cfg: AttnConfig, x, positions, *,
                       cache_len: int, q_chunk=512, kv_chunk=1024):
     """Full-sequence attention that also returns the K/V cache.

@@ -520,6 +520,169 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
     return shard(logits, ("batch", None, "vocab")), new_state
 
 
+# --------------------------------------------------------------------------
+# serving: paged decode (continuous batching)
+# --------------------------------------------------------------------------
+
+def needs_kv_pages(cfg: ModelConfig) -> bool:
+    """Does any layer keep a token-indexed KV history?  Pure-recurrent
+    stacks (SSM / RG-LRU only) carry fixed-size state and need no pages."""
+    return any(k in ("attn", "local_attn") for k in cfg.block_kinds())
+
+
+def history_horizon(cfg: ModelConfig) -> Optional[int]:
+    """How many past tokens any layer can still read.
+
+    ``None`` → unbounded (some global-attention layer); otherwise the
+    largest local window (0 for pure-recurrent stacks).  The serving
+    engine frees KV pages that fall entirely behind this horizon, which
+    is what bounds a local/recurrent config's per-slot memory by its
+    window rather than its sequence length.
+    """
+    horizon = 0
+    for k in cfg.block_kinds():
+        if k == "attn":
+            return None
+        if k == "local_attn":
+            horizon = max(horizon, cfg.window or 0)
+    return horizon
+
+
+def init_paged_state(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, max_pages: int, dtype=jnp.float32):
+    """Decode state for the continuous-batching engine.
+
+    Unlike ``init_decode_state`` — whose attention caches pin
+    ``batch × max_seq`` memory per layer — the attention K/V here live in
+    a *physical page pool* ``(n_pages, page_size, KVH, hd)`` shared by all
+    ``n_slots`` batch slots through a per-slot block table
+    ``(n_slots, max_pages)``; a slot's memory is the pages actually
+    allocated to it.  Page 0 is the sacrificial dead page: free slots
+    (table all-zero, pos 0) write their garbage token there, and reads of
+    unallocated logical pages land there too (masked at -inf by position).
+    Recurrent layers (RG-LRU / SSM conv+hidden) keep fixed-size per-slot
+    state indexed by slot id — no paging, but they ride the same pytree
+    and are reset by the engine's prefill-on-admit.  ``pos`` is per-slot
+    (slots decode at different depths in one fused step).
+    """
+    if cfg.n_enc_layers > 0 or cfg.n_patches > 0:
+        raise NotImplementedError(
+            "paged decode supports decoder-only token models (enc-dec "
+            "cross caches / vision prefixes still use the static path)")
+    unit, n_groups, tail = cfg.layer_plan()
+
+    def block_cache(kind: str) -> Dict[str, Any]:
+        cache: Dict[str, Any] = {}
+        if kind in ("attn", "local_attn"):
+            cache["k"] = jnp.zeros(
+                (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        elif kind == "rglru":
+            conv, h = R.init_rglru_state(_rglru_cfg(cfg), n_slots, dtype)
+            cache["conv"], cache["h"] = conv, h
+        elif kind == "ssm":
+            conv, st = S.init_ssm_state(_ssm_cfg(cfg), n_slots, dtype)
+            cache["conv"], cache["state"] = conv, st
+        else:
+            raise ValueError(kind)
+        return cache
+
+    def stacked(kinds, count):
+        per = [{f"b{i}": block_cache(k) for i, k in enumerate(kinds)}
+               for _ in range(count)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+    state = {"groups": stacked(unit, n_groups),
+             "table": jnp.zeros((n_slots, max_pages), jnp.int32),
+             "pos": jnp.zeros((n_slots,), jnp.int32)}
+    if tail:
+        state["tail"] = stacked((tail[0],), len(tail))
+    return state
+
+
+def _apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
+                              table, pos):
+    new_cache = dict(cache)
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    if kind in ("attn", "local_attn"):
+        acfg = _attn_cfg(cfg, kind)
+        h, nk, nv = L.attention_decode_paged(p["attn"], acfg, h,
+                                             cache["k"], cache["v"],
+                                             table, pos)
+        new_cache["k"], new_cache["v"] = nk, nv
+    elif kind == "rglru":
+        h, conv, hidden = R.rglru_decode_step(
+            p["rglru"], _rglru_cfg(cfg), h, cache["conv"], cache["h"])
+        new_cache["conv"], new_cache["h"] = conv, hidden
+    elif kind == "ssm":
+        h, conv, st = S.ssm_decode_step(
+            p["ssm"], _ssm_cfg(cfg), h, cache["conv"], cache["state"])
+        new_cache["conv"], new_cache["state"] = conv, st
+    x = x + h
+
+    if "mlp" in p:
+        h = L.apply_norm(x, p["norm2"], cfg.norm)
+        x = x + L.mlp(p["mlp"], h, cfg.activation)
+    elif "moe" in p:
+        h = L.apply_norm(x, p["norm2"], cfg.norm)
+        x = x + M.moe_layer(p["moe"], _moe_cfg(cfg), h)
+    return x, new_cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, state, tokens, *,
+                      return_hidden: bool = False):
+    """One fused decode step over every engine slot, paged KV.
+
+    tokens: (n_slots, 1) int32 — the pending token of each slot (free
+    slots carry 0 and write into the dead page).  Mirrors ``decode_step``
+    (same carry-DUS scan over the stacked layer caches) with two
+    differences: positions are per-slot (``state["pos"]``), and attention
+    layers read/write the shared page pool through ``state["table"]``.
+    Returns ``(logits | hidden, new_state)``; ``return_hidden=True``
+    skips the dense ``lm_head`` so a serving-side ``SparseLogitHead`` can
+    score the hidden states instead (its execution plan depends only on
+    the weight pattern, never on how many slots are live).
+    """
+    unit, n_groups, tail = cfg.layer_plan()
+    table, pos = state["table"], state["pos"]
+    x = params["embed_tokens"][tokens]
+
+    def scan_decode(stack_params, stack_cache, kinds, x):
+        def body(carry, layer_p):
+            x, cache_all, li = carry
+            layer_c = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, li, 0,
+                                                       keepdims=False),
+                cache_all)
+            new_c = {}
+            for i, kind in enumerate(kinds):
+                x, nc = _apply_block_decode_paged(
+                    layer_p[f"b{i}"], cfg, kind, x, layer_c[f"b{i}"],
+                    table, pos)
+                new_c[f"b{i}"] = nc
+            cache_all = jax.tree_util.tree_map(
+                lambda a, nc: jax.lax.dynamic_update_index_in_dim(
+                    a, nc.astype(a.dtype), li, 0),
+                cache_all, new_c)
+            return (x, cache_all, li + 1), None
+        (x, new_cache, _), _ = jax.lax.scan(
+            body, (x, stack_cache, jnp.int32(0)), stack_params)
+        return x, new_cache
+
+    x, g_cache = scan_decode(params["groups"], state["groups"], unit, x)
+    new_state = {"groups": g_cache, "table": table, "pos": pos + 1}
+    if tail:
+        x, t_cache = scan_decode(params["tail"], state["tail"],
+                                 (tail[0],), x)
+        new_state["tail"] = t_cache
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    if return_hidden:
+        return x, new_state
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    return shard(logits, ("batch", None, "vocab")), new_state
+
+
 def _apply_block_prefill(p, cfg: ModelConfig, kind: str, x, positions,
                          enc_kv, max_seq: int, cache_dtype):
     """Full-sequence block that also emits its decode cache."""
@@ -565,11 +728,14 @@ def _apply_block_prefill(p, cfg: ModelConfig, kind: str, x, positions,
 
 
 def prefill(params, cfg: ModelConfig, batch, *, max_seq: Optional[int] = None,
-            cache_dtype=None, remat: bool = True):
+            cache_dtype=None, remat: bool = True,
+            return_hidden: bool = False):
     """Process the prompt, return (last-token logits, decode state).
 
     The per-layer caches come out stacked (scan ys), matching
     ``init_decode_state`` layout, with ``pos`` set past the prompt.
+    ``return_hidden=True`` returns the final-norm hidden state instead of
+    logits (for serving with an external ``SparseLogitHead``).
     """
     unit, n_groups, tail = cfg.layer_plan()
     x, positions = _embed_inputs(params, cfg, batch)
@@ -604,6 +770,8 @@ def prefill(params, cfg: ModelConfig, batch, *, max_seq: Optional[int] = None,
         state["tail"] = t_cache
 
     x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    if return_hidden:
+        return x, state
     logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
     return shard(logits, ("batch", None, "vocab")), state
 

@@ -1,4 +1,11 @@
+from repro.serve.batcher import BatcherConfig, ContinuousBatcher
 from repro.serve.engine import (SamplingConfig, SparseLogitHead, generate,
-                                sample_token)
+                                jitted_decode_step, jitted_prefill,
+                                sample_token, token_entropy)
+from repro.serve.paged_cache import PageAllocator
+from repro.serve.queue import Completion, Request, RequestQueue
 
-__all__ = ["SamplingConfig", "SparseLogitHead", "generate", "sample_token"]
+__all__ = ["BatcherConfig", "Completion", "ContinuousBatcher",
+           "PageAllocator", "Request", "RequestQueue", "SamplingConfig",
+           "SparseLogitHead", "generate", "jitted_decode_step",
+           "jitted_prefill", "sample_token", "token_entropy"]

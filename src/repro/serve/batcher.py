@@ -1,0 +1,315 @@
+"""Continuous-batching serving engine over the paged decode path.
+
+One :class:`ContinuousBatcher` owns ``max_slots`` batch slots, a paged KV
+state (``models.lm.init_paged_state``), a :class:`~repro.serve.queue.
+RequestQueue`, and (optionally) a plan-cached
+:class:`~repro.serve.engine.SparseLogitHead`.  Each scheduling round
+(:meth:`step`):
+
+1. **Admit** — while a ready request, a free slot, and enough KV pages
+   exist: run a batch-1 prefill (jit-cached per padded prompt length),
+   scatter its caches into the slot's pages, sample the first token.
+   New sequences join at *any* decode step — admission never waits for
+   the batch to drain.
+2. **Decode** — one fused ``decode_step_paged`` over all ``max_slots``
+   rows (free slots ride along writing into the dead page, so the jitted
+   step compiles exactly once per config); per-slot positions let slots
+   sit at different depths.  The sparse head, when present, scores the
+   hidden states with the *same* plan every step — the plan depends only
+   on the weight pattern, so slot churn never replans.
+3. **Sample/retire** — per-slot sampling (each request carries its own
+   fold_in-derived key, so its draws are independent of batch
+   composition), EOS/length retirement (the same per-sequence done
+   logic as ``generate``'s ragged-EOS fix), page freeing, and — for
+   local-window/recurrent configs — reclamation of pages that fell
+   behind the attention horizon.
+
+Greedy outputs are bit-identical to the static ``generate`` path when
+the geometries match (see ``serve/README.md``); MoE configs are served
+but excluded from the bit-identity guarantee (expert capacity couples
+rows of a batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.engine import (SamplingConfig, SparseLogitHead,
+                                jitted_decode_step, jitted_prefill,
+                                sample_token, token_entropy)
+from repro.serve.paged_cache import (DEAD_PAGE, PageAllocator,
+                                     assert_paged_memory_bound, make_table,
+                                     pages_for, reclaimable_pages,
+                                     scatter_prefill_state)
+from repro.serve.queue import Completion, Request, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_slots: int = 8           # fused-step batch width (compiled once)
+    page_size: int = 8           # tokens per KV page
+    n_pages: int = 64            # physical pool size (incl. dead page 0)
+    max_seq: int = 128           # per-request prompt + new-token cap
+    collect_entropy: bool = False
+
+    @property
+    def max_pages(self) -> int:  # block-table width per slot
+        return -(-self.max_seq // self.page_size)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pages: List[int]
+    pos: int                     # next write position (tokens so far)
+    pending: int                 # last sampled token, not yet fed
+    out: List[int]
+    key: jax.Array
+    t_admit: float
+    t_first: float
+    steps: int = 0
+    pages_reclaimed: int = 0
+    entropy: List[float] = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatcher:
+    """The serving engine.  See module docstring for the step anatomy."""
+
+    def __init__(self, params, cfg: ModelConfig, queue: RequestQueue,
+                 bcfg: BatcherConfig = BatcherConfig(),
+                 sampling: SamplingConfig = SamplingConfig(),
+                 head: Optional[SparseLogitHead] = None,
+                 key: Optional[jax.Array] = None):
+        if queue.max_seq is None:
+            queue.max_seq = bcfg.max_seq
+        self.params = params
+        self.cfg = cfg
+        self.queue = queue
+        self.bcfg = bcfg
+        self.sampling = sampling
+        self.head = head
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+
+        self.needs_kv = lm.needs_kv_pages(cfg)
+        self.horizon = lm.history_horizon(cfg)
+        self.allocator = PageAllocator(bcfg.n_pages, bcfg.page_size)
+        self.state = lm.init_paged_state(
+            cfg, bcfg.max_slots, bcfg.n_pages, bcfg.page_size,
+            bcfg.max_pages)
+        self.slots: List[Optional[_Slot]] = [None] * bcfg.max_slots
+        self._step_fn = jitted_decode_step(cfg, paged=True,
+                                           return_hidden=head is not None)
+        if head is not None:
+            # closed over the (pytree) weight + prebuilt plan: one compile,
+            # and the plan object is frozen into the callable — there is
+            # nothing a later admission could replan.
+            self._head_fn = jax.jit(lambda h: head(h))
+        self.completions: List[Completion] = []
+        self.steps = 0
+        self.occupancy_sum = 0       # Σ live slots per fused step
+        self.admitted = 0
+        self.pages_reclaimed = 0     # freed behind the window horizon
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _prompt_pages(self, req: Request) -> int:
+        if not self.needs_kv:
+            return 0
+        return pages_for(req.prompt_len, self.bcfg.page_size)
+
+    def try_admit(self, now: float) -> int:
+        """Admit every ready request a slot + pages can take.  Returns
+        how many were admitted this round."""
+        n = 0
+        while True:
+            req = self.queue.peek_ready(now)
+            if req is None:
+                break
+            slot_id = self.free_slot()
+            if slot_id is None:
+                break
+            n_pp = self._prompt_pages(req)
+            # reserve one decode page beyond the prompt so the first
+            # fused step can never die on an empty pool mid-flight
+            if self.needs_kv and not self.allocator.can_alloc(n_pp + 1):
+                break
+            self.queue.pop()
+            self._admit(req, slot_id, n_pp, now)
+            n += 1
+        return n
+
+    def _admit(self, req: Request, slot_id: int, n_pp: int,
+               now: float) -> None:
+        pages = self.allocator.alloc(n_pp) if n_pp else []
+        padded_len = len(pages) * self.bcfg.page_size
+        prefill = jitted_prefill(self.cfg, max(padded_len, req.prompt_len),
+                                 return_hidden=self.head is not None)
+        out, pstate = prefill(self.params,
+                              batch={"tokens": jnp.asarray(
+                                  req.tokens, jnp.int32)[None]})
+        logits = (self._head_fn(out) if self.head is not None else out)
+
+        self.state = scatter_prefill_state(
+            self.state, pstate, slot_id, pages, self.bcfg.page_size)
+
+        slot = _Slot(req=req, pages=pages, pos=req.prompt_len,
+                     pending=0, out=[],
+                     key=jax.random.fold_in(self.key, req.rid),
+                     t_admit=now, t_first=now)
+        reason = self._sample(slot, logits[:, -1], now)
+        self.slots[slot_id] = slot
+        self.admitted += 1
+        if reason is not None:       # eos/length on the very first token
+            self._retire(slot_id, reason, now)
+
+    # ------------------------------------------------------------------
+    # sampling / retirement
+    # ------------------------------------------------------------------
+
+    def _sample(self, slot: _Slot, logits_row, now: float):
+        """Sample one token for a slot; returns a finish reason or None.
+
+        ``logits_row``: (1, V_padded).  Every slot draws from its own
+        fold_in key chain, so a request's sampled tokens do not depend on
+        which other requests share the batch.
+        """
+        slot.key, sub = jax.random.split(slot.key)
+        tok = int(sample_token(logits_row, sub, self.sampling,
+                               self.cfg.vocab_size)[0])
+        slot.out.append(tok)
+        if self.bcfg.collect_entropy:
+            slot.entropy.append(
+                float(token_entropy(logits_row, self.cfg.vocab_size)[0]))
+        slot.pending = tok
+        req = slot.req
+        if req.eos_id >= 0 and tok == req.eos_id:
+            return "eos"
+        if len(slot.out) >= req.max_new_tokens:
+            return "length"
+        return None
+
+    def _retire(self, slot_id: int, reason: str, now: float) -> None:
+        slot = self.slots[slot_id]
+        self.completions.append(Completion(
+            rid=slot.req.rid, prompt_len=slot.req.prompt_len,
+            tokens=list(slot.out), finished_by=reason,
+            arrival=slot.req.arrival, t_admit=slot.t_admit,
+            t_first_token=slot.t_first, t_done=now, steps=slot.steps))
+        live = [p for p in slot.pages if p != DEAD_PAGE]
+        if live:
+            self.allocator.free(live)
+        self.slots[slot_id] = None
+
+    def _reclaim_window_pages(self, slot: _Slot) -> None:
+        """Free pages every layer's read horizon has moved past (local
+        window / pure-recurrent configs); their table entries fall back
+        to the dead page.  Unbounded-horizon configs never reclaim."""
+        r = reclaimable_pages(slot.pos, self.horizon, self.bcfg.page_size)
+        for j in range(min(r, len(slot.pages))):
+            if slot.pages[j] != DEAD_PAGE:
+                self.allocator.free([slot.pages[j]])
+                slot.pages[j] = DEAD_PAGE
+                slot.pages_reclaimed += 1
+                self.pages_reclaimed += 1
+
+    # ------------------------------------------------------------------
+    # the fused step
+    # ------------------------------------------------------------------
+
+    def live(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _ensure_decode_page(self, slot: _Slot) -> None:
+        """The token written this step lands at logical page pos // P —
+        allocate it if the slot hasn't grown there yet."""
+        if not self.needs_kv:
+            return
+        need = slot.pos // self.bcfg.page_size + 1
+        while len(slot.pages) < need:
+            slot.pages.extend(self.allocator.alloc(1))
+
+    def step(self, now: float = 0.0) -> List[Completion]:
+        """One scheduling round: admit, fused-decode, sample, retire.
+        Returns the requests that completed during this round."""
+        before = len(self.completions)
+        self.try_admit(now)
+        if self.live() == 0:
+            return self.completions[before:]
+
+        tokens = np.zeros((self.bcfg.max_slots, 1), np.int32)
+        pos = np.zeros((self.bcfg.max_slots,), np.int32)
+        pages: List[List[int]] = [[] for _ in range(self.bcfg.max_slots)]
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            self._ensure_decode_page(slot)
+            tokens[i, 0] = slot.pending
+            pos[i] = slot.pos
+            pages[i] = slot.pages
+        table = make_table(pages, self.bcfg.max_pages)
+
+        state = dict(self.state)
+        state["table"] = jnp.asarray(table)
+        state["pos"] = jnp.asarray(pos)
+        out, new_state = self._step_fn(self.params, state=state,
+                                       tokens=jnp.asarray(tokens))
+        logits = (self._head_fn(out) if self.head is not None else out)
+        self.state = new_state
+        self.steps += 1
+        self.occupancy_sum += self.live()
+
+        logits_host = np.asarray(logits[:, -1])
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot.pos += 1
+            slot.steps += 1
+            reason = self._sample(slot, logits_host[i][None], now)
+            if reason is not None:
+                self._retire(i, reason, now)
+            else:
+                self._reclaim_window_pages(slot)
+        return self.completions[before:]
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+
+    def idle(self) -> bool:
+        return self.live() == 0 and self.queue.pending() == 0
+
+    def run(self, max_steps: int = 100_000,
+            clock=None) -> List[Completion]:
+        """Drive until queue + slots drain.  ``clock`` maps the step
+        index to 'now' (default: the step index itself — the
+        deterministic replay clock)."""
+        for t in range(max_steps):
+            now = float(clock()) if clock is not None else float(t)
+            if self.idle():
+                break
+            self.step(now)
+        else:
+            raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return self.completions
+
+    def memory_stats(self) -> Dict[str, Any]:
+        stats = assert_paged_memory_bound(
+            self.allocator, self.bcfg.max_slots, self.bcfg.max_pages)
+        stats["page_size"] = self.bcfg.page_size
+        stats["reclaimed"] = self.pages_reclaimed
+        return stats

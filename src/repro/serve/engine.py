@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -137,13 +137,72 @@ def sample_token(logits, key, cfg: SamplingConfig, vocab_size: int):
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def token_entropy(logits, vocab_size: int):
+    """Per-row softmax entropy over the REAL vocabulary.
+
+    logits: (B, V_padded) → (B,) f32.  Padded vocab slots hold garbage
+    scores (``cfg.vocab_padded`` rounds the head up for sharding), so the
+    distribution is taken over ``logits[:, :vocab_size]`` — the same ids
+    ``sample_token`` can actually emit.
+    """
+    lg = logits[..., :vocab_size].astype(jnp.float32)
+    probs = jax.nn.softmax(lg, axis=-1)
+    return -jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# jitted-callable cache: back-to-back generate()/engine calls must not
+# recompile.  jax.jit caches traces per *callable*, and a fresh
+# functools.partial is a fresh callable — so the partials are built once
+# here, keyed on the (hashable, frozen) ModelConfig.
+# --------------------------------------------------------------------------
+
+_PREFILL_JIT: Dict[tuple, Any] = {}
+_DECODE_JIT: Dict[tuple, Any] = {}
+
+
+def jitted_prefill(cfg: ModelConfig, max_seq: int, *,
+                   return_hidden: bool = False):
+    """Cached ``jax.jit(lm.prefill)`` for (cfg, max_seq)."""
+    key = (cfg, int(max_seq), bool(return_hidden))
+    fn = _PREFILL_JIT.get(key)
+    if fn is None:
+        fn = jax.jit(functools.partial(lm.prefill, cfg=cfg,
+                                       max_seq=int(max_seq),
+                                       return_hidden=return_hidden))
+        _PREFILL_JIT[key] = fn
+    return fn
+
+
+def jitted_decode_step(cfg: ModelConfig, *, paged: bool = False,
+                       return_hidden: bool = False):
+    """Cached ``jax.jit(lm.decode_step)`` (or the paged variant) per cfg."""
+    key = (cfg, bool(paged), bool(return_hidden))
+    fn = _DECODE_JIT.get(key)
+    if fn is None:
+        if paged:
+            fn = jax.jit(functools.partial(lm.decode_step_paged, cfg=cfg,
+                                           return_hidden=return_hidden))
+        else:
+            fn = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+        _DECODE_JIT[key] = fn
+    return fn
+
+
 def generate(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
              sampling: SamplingConfig = SamplingConfig(),
              key: Optional[jax.Array] = None,
              max_seq: Optional[int] = None):
     """Prefill on `batch` then decode `max_new_tokens` greedily/sampled.
 
-    Returns (tokens (B, max_new_tokens), per-step logits entropy trace).
+    Returns (tokens (B, T), per-step entropy trace), T ≤ max_new_tokens.
+
+    EOS is tracked *per sequence*: a row that samples ``eos_id`` stops —
+    its later slots are filled with ``eos_id`` (never live samples) and it
+    no longer contributes to the entropy trace — and the loop exits as
+    soon as every row has finished.  Entropy is measured over the real
+    vocabulary only (``token_entropy``): the padded head slots carry
+    garbage logits that ``sample_token`` masks, so the trace must too.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -151,22 +210,27 @@ def generate(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     if max_seq is None:
         max_seq = prompt_len + sampling.max_new_tokens
 
-    prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg,
-                                        max_seq=max_seq))
-    step_fn = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+    prefill = jitted_prefill(cfg, max_seq)
+    step_fn = jitted_decode_step(cfg)
 
     logits, state = prefill(params, batch=batch)
+    b = batch["tokens"].shape[0]
+    done = jnp.zeros((b,), bool)
     outs = []
     entropies = []
-    tok = None
     for t in range(sampling.max_new_tokens):
         key, sub = jax.random.split(key)
         tok = sample_token(logits[:, -1], sub, sampling, cfg.vocab_size)
+        if sampling.eos_id >= 0:
+            tok = jnp.where(done, sampling.eos_id, tok)
         outs.append(tok)
-        probs = jax.nn.softmax(logits[:, -1].astype(jnp.float32), -1)
-        entropies.append(float(-jnp.sum(
-            probs * jnp.log(probs + 1e-9), -1).mean()))
-        if sampling.eos_id >= 0 and bool((tok == sampling.eos_id).all()):
-            break
+        ent = token_entropy(logits[:, -1], cfg.vocab_size)
+        live = ~done
+        entropies.append(float(jnp.where(live, ent, 0.0).sum()
+                               / jnp.maximum(live.sum(), 1)))
+        if sampling.eos_id >= 0:
+            done = done | (tok == sampling.eos_id)
+            if bool(done.all()):
+                break
         logits, state = step_fn(params, state=state, tokens=tok[:, None])
     return jnp.stack(outs, axis=1), entropies

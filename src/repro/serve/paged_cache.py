@@ -1,0 +1,184 @@
+"""Host-side paged KV-cache bookkeeping for the continuous batcher.
+
+The device side is ``models.lm.init_paged_state`` / ``decode_step_paged``:
+attention K/V live in one physical page pool ``(n_pages, page_size, …)``
+per layer, addressed through a per-slot block table.  This module owns
+the *host* half:
+
+* :class:`PageAllocator` — the free list over physical pages.  Page 0 is
+  reserved as the **dead page** (free slots and unmapped block-table
+  entries point there; reads of it are masked, writes to it are garbage
+  by design), so allocations hand out pages ``1..n_pages-1``.  Tracks
+  ``peak_in_use`` — the number the paged-memory claim is asserted on:
+  peak memory scales with pages actually allocated, not
+  ``n_slots × max_pages``.
+* :func:`scatter_prefill_state` — after a batch-1 ``lm.prefill`` for a
+  newly admitted request, scatter its per-layer caches into the slot's
+  pages (attention K/V, converted from the prefill cache layout to
+  logical page order) and slot-indexed rows (RG-LRU / SSM recurrent
+  state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+DEAD_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over the physical KV page pool.
+
+    LIFO reuse (a freed page is handed out again first) keeps the pool's
+    working set compact; correctness never depends on *which* page a slot
+    gets because all addressing goes through the block table.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the dead page)")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.in_use = 0
+        self.peak_in_use = 0
+        self.total_allocs = 0
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"KV page pool exhausted: requested {n}, "
+                f"{len(self._free)} free of {self.n_pages - 1} "
+                f"(raise n_pages, shrink max_slots, or admit less)")
+        pages = [self._free.pop() for _ in range(n)]
+        self.in_use += n
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for pg in pages:
+            if pg == DEAD_PAGE:
+                raise ValueError("freeing the dead page")
+            self._free.append(pg)
+        self.in_use -= len(pages)
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def reclaimable_pages(pos: int, horizon: Optional[int],
+                      page_size: int) -> int:
+    """Logical pages `< r` are dead for every future read at pos' >= pos.
+
+    A read at position ``pos'`` touches logical index ``t`` only when
+    ``t > pos' - horizon``; a page ``j`` (tokens ``[jP, (j+1)P)``) is
+    reclaimable when its last token can never satisfy that again:
+    ``(j+1)*P - 1 <= pos - horizon``.  Returns the count ``r`` of leading
+    logical pages that may be freed (0 when the horizon is unbounded).
+    """
+    if horizon is None:
+        return 0
+    return max(0, (pos - horizon + 1) // page_size)
+
+
+# --------------------------------------------------------------------------
+# prefill → pages
+# --------------------------------------------------------------------------
+
+def _logical_kv(cache: jax.Array, padded_len: int) -> jax.Array:
+    """Prefill cache (G, 1, cache_len, KVH, hd) → logical (G, padded, …).
+
+    Global-attention caches are already logical (``cache_len ==
+    padded_len`` when prefill ran with ``max_seq=padded_len``).  A
+    local-window cache comes back in *rolling* layout (slot ``t % window``
+    holds absolute position ``t``), so the logical view is a modular
+    gather; entries before ``prompt - window`` pick up stale slots, which
+    the window mask at read time already excludes.
+    """
+    cache_len = cache.shape[2]
+    if cache_len == padded_len:
+        return cache[:, 0]
+    idx = np.arange(padded_len) % cache_len
+    return cache[:, 0, idx]
+
+
+def scatter_prefill_state(state: Dict[str, Any], pstate: Dict[str, Any],
+                          slot: int, phys_pages: Sequence[int],
+                          page_size: int) -> Dict[str, Any]:
+    """Write a batch-1 prefill's caches into an admitted slot.
+
+    ``state`` — the engine's paged decode state (``init_paged_state``
+    layout); ``pstate`` — the state returned by ``lm.prefill`` on the
+    single new request, run with ``max_seq = len(phys_pages) *
+    page_size``.  Attention K/V scatter page-aligned into the pool at the
+    slot's physical pages; recurrent conv/hidden state rows overwrite the
+    slot's row (which also *resets* whatever the previous occupant or a
+    free-slot garbage step left there).  Returns the updated state pytree
+    (functional — the engine swaps it in).
+    """
+    padded_len = len(phys_pages) * page_size
+    phys = np.asarray(phys_pages, np.int32)
+
+    def scatter_group(g_state, g_pre):
+        out = {}
+        for bkey, cache in g_state.items():
+            new = dict(cache)
+            for name, arr in cache.items():
+                src = g_pre[bkey][name]
+                if name in ("k", "v"):
+                    if padded_len == 0:
+                        continue
+                    logical = _logical_kv(src, padded_len)
+                    g = logical.shape[0]
+                    paged = logical.reshape(g, len(phys), page_size,
+                                            *logical.shape[2:])
+                    new[name] = arr.at[:, phys].set(
+                        paged.astype(arr.dtype))
+                else:
+                    new[name] = arr.at[:, slot].set(
+                        src[:, 0].astype(arr.dtype))
+            out[bkey] = new
+        return out
+
+    new_state = dict(state)
+    new_state["groups"] = scatter_group(state["groups"], pstate["groups"])
+    if "tail" in state:
+        new_state["tail"] = scatter_group(state["tail"], pstate["tail"])
+    return new_state
+
+
+def make_table(slot_pages: Sequence[Sequence[int]],
+               max_pages: int) -> np.ndarray:
+    """Per-slot page lists → dense (n_slots, max_pages) block table.
+
+    Unmapped entries point at the dead page.
+    """
+    table = np.full((len(slot_pages), max_pages), DEAD_PAGE, np.int32)
+    for i, pages in enumerate(slot_pages):
+        if len(pages) > max_pages:
+            raise ValueError(f"slot {i}: {len(pages)} pages > table "
+                             f"width {max_pages}")
+        table[i, :len(pages)] = pages
+    return table
+
+
+def assert_paged_memory_bound(allocator: PageAllocator, n_slots: int,
+                              max_pages: int) -> Dict[str, int]:
+    """The paged-memory claim, as numbers the tests/bench assert on:
+    peak pool usage (pages actually allocated at the high-water mark)
+    versus the ``n_slots × max_pages`` a static per-slot cache pins."""
+    static_pages = n_slots * max_pages
+    return {"peak_pages": allocator.peak_in_use,
+            "pool_pages": allocator.n_pages - 1,
+            "static_equiv_pages": static_pages}

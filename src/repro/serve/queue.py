@@ -1,0 +1,124 @@
+"""Request queue + admission control for the continuous-batching engine.
+
+The queue is the engine's only intake: producers ``submit()`` requests
+(non-blocking — a full queue *rejects* instead of backing up into the
+caller), the engine polls ``peek_ready(now)`` each scheduling round for
+requests whose arrival time has come.  Time is whatever clock the driver
+uses — wall seconds in the serving bench, decode-step indices in the
+deterministic replay mode — the queue only compares it.
+
+Admission control happens twice:
+
+* at **submit**: depth-bounded (``max_depth``) and shape-bounded
+  (``max_seq`` caps prompt + max_new_tokens so a request can never
+  outgrow its slot's block table); rejects are counted, never raised.
+* at **claim** (in the batcher): a ready request is only admitted when a
+  batch slot AND enough KV pages for its prompt (plus one decode page)
+  are free — otherwise it stays queued, FIFO order preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``eos_id``/``max_new_tokens`` are per-request (a queue can mix);
+    ``arrival`` is the submit time in driver-clock units.
+    """
+    tokens: np.ndarray                   # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1
+    arrival: float = 0.0
+    rid: int = dataclasses.field(
+        default_factory=lambda: next(_rid_counter))
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.size)
+
+
+@dataclasses.dataclass
+class Completion:
+    """What the engine hands back when a request retires."""
+    rid: int
+    prompt_len: int
+    tokens: List[int]                    # sampled tokens, incl. final eos
+    finished_by: str                     # "eos" | "length"
+    arrival: float
+    t_admit: float
+    t_first_token: float
+    t_done: float
+    steps: int                           # fused decode steps it rode
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.arrival
+
+
+class RequestQueue:
+    """Depth-bounded FIFO with arrival-time gating."""
+
+    def __init__(self, max_depth: int = 256,
+                 max_seq: Optional[int] = None):
+        self.max_depth = int(max_depth)
+        self.max_seq = max_seq
+        self._q: Deque[Request] = deque()
+        self.accepted = 0
+        self.rejected_depth = 0
+        self.rejected_shape = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        """Non-blocking admission: False = rejected (full / too long)."""
+        if (self.max_seq is not None
+                and req.prompt_len + req.max_new_tokens > self.max_seq):
+            self.rejected_shape += 1
+            return False
+        if len(self._q) >= self.max_depth:
+            self.rejected_depth += 1
+            return False
+        self._q.append(req)
+        self.accepted += 1
+        return True
+
+    def submit_all(self, reqs: Sequence[Request]) -> int:
+        return sum(self.submit(r) for r in reqs)
+
+    def peek_ready(self, now: float) -> Optional[Request]:
+        """Head request whose arrival time has come, without removing."""
+        if self._q and self._q[0].arrival <= now:
+            return self._q[0]
+        return None
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def pending(self) -> int:
+        return len(self._q)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._q[0].arrival if self._q else None

@@ -1,6 +1,10 @@
 """Serving-path equivalence: prefill + decode_step must reproduce the full
 forward logits for every architecture family (incl. rolling local windows,
-SSM states and cross-attention caches)."""
+SSM states and cross-attention caches) — plus the decode-loop contracts:
+padded-vocab entropy, ragged per-sequence EOS, jit-callable caching, and
+the continuous-batching engine's bit-identity with static ``generate``."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +13,9 @@ import pytest
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import lm
-from repro.serve import SamplingConfig, generate
+from repro.serve import (BatcherConfig, ContinuousBatcher, Request,
+                         RequestQueue, SamplingConfig, generate)
+from repro.serve import engine as engine_mod
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
@@ -73,3 +79,139 @@ def test_generate_greedy_deterministic():
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
     assert t1.shape == (2, 6)
     assert int(t1.max()) < cfg.vocab_size  # padded ids never sampled
+
+
+# --------------------------------------------------------------------------
+# decode-loop contracts
+# --------------------------------------------------------------------------
+
+def _pad_params_to_vocab(params, v_exact: int, v_padded: int):
+    """Grow embed/lm_head rows to the padded vocab with GARBAGE values —
+    if any padded slot ever reaches a softmax or an argmax, outputs
+    visibly change (which is exactly what the entropy pin detects)."""
+    def pad(a):
+        extra = jnp.full((v_padded - v_exact, a.shape[1]), 37.0, a.dtype)
+        return jnp.concatenate([a, extra], axis=0)
+    out = dict(params)
+    out["embed_tokens"] = pad(params["embed_tokens"])
+    out["lm_head"] = pad(params["lm_head"])
+    return out
+
+
+@pytest.mark.tier1
+def test_generate_entropy_padded_vocab_pin():
+    """Entropy trace must be identical for a padded vs exactly-sized
+    vocab: the padded head slots hold garbage logits that sample_token
+    masks — the entropy softmax has to mask them too."""
+    cfg = get_smoke_config("qwen3-4b")
+    assert cfg.vocab_padded == cfg.vocab_size  # smoke config is exact
+    cfg_padded = dataclasses.replace(cfg, vocab_pad_multiple=768)
+    assert cfg_padded.vocab_padded > cfg_padded.vocab_size
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    params_padded = _pad_params_to_vocab(params, cfg.vocab_size,
+                                         cfg_padded.vocab_padded)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    sampling = SamplingConfig(max_new_tokens=3)
+    toks, ent = generate(params, cfg, batch, sampling)
+    toks_p, ent_p = generate(params_padded, cfg_padded, batch, sampling)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_p))
+    assert ent == ent_p    # exact float equality: same masked softmax
+
+
+@pytest.mark.tier1
+def test_generate_ragged_eos_termination():
+    """Rows that hit EOS early stop sampling: their tails are eos-padded
+    (never live samples) and the loop exits when every row is done."""
+    cfg = get_smoke_config("qwen3-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    max_new = 8
+    free_run, _ = generate(params, cfg, batch,
+                           SamplingConfig(max_new_tokens=max_new))
+    free = np.asarray(free_run)
+    # pick the first token of row 0 as EOS: row 0 finishes at step 0,
+    # row 1 keeps decoding its own (unchanged) trajectory
+    eos = int(free[0, 0])
+    assert eos != int(free[1, 0])
+
+    toks, _ = generate(params, cfg, batch,
+                       SamplingConfig(max_new_tokens=max_new, eos_id=eos))
+    got = np.asarray(toks)
+
+    def expected_row(row):
+        hits = np.nonzero(row == eos)[0]
+        cut = int(hits[0]) + 1 if hits.size else len(row)
+        return list(row[:cut]) + [eos] * (got.shape[1] - cut)
+
+    exp = np.asarray([expected_row(free[0]), expected_row(free[1])])
+    # the loop must exit once both rows are done — never pad to max_new
+    done_at = [np.nonzero(free[r] == eos)[0] for r in range(2)]
+    steps = max((int(h[0]) + 1) if h.size else max_new for h in done_at)
+    assert got.shape[1] == steps
+    np.testing.assert_array_equal(got, exp[:, :steps])
+
+
+@pytest.mark.tier1
+def test_generate_jit_callables_cached():
+    """Back-to-back generate() calls must reuse one jitted prefill/step
+    pair (keyed on cfg) instead of recompiling per call."""
+    cfg = get_smoke_config("qwen3-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    sampling = SamplingConfig(max_new_tokens=3)
+    step_fn = engine_mod.jitted_decode_step(cfg)
+    prefill_fn = engine_mod.jitted_prefill(cfg, 8 + 3)
+    generate(params, cfg, batch, sampling)
+    traced = hasattr(step_fn, "_cache_size")
+    n_traces = step_fn._cache_size() if traced else None
+    generate(params, cfg, batch, sampling)
+    assert engine_mod.jitted_decode_step(cfg) is step_fn
+    assert engine_mod.jitted_prefill(cfg, 8 + 3) is prefill_fn
+    if traced:   # the second call must hit the first call's trace
+        assert step_fn._cache_size() == n_traces
+
+
+# --------------------------------------------------------------------------
+# continuous batching ≡ static generate
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-4b", "recurrentgemma-9b",
+                                  "mamba2-2.7b"])
+def test_continuous_batching_matches_generate(arch):
+    """A request admitted mid-stream into the continuous batcher decodes
+    greedy tokens bit-identical to the same request run alone through the
+    static ``generate`` path (matching cache geometry: prompt + max_new =
+    max_pages · page_size)."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt_len, max_new, page = 8, 8, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, prompt_len),
+                                 0, cfg.vocab_size)
+    solo, _ = generate(params, cfg, {"tokens": prompts[2:3]},
+                       SamplingConfig(max_new_tokens=max_new))
+    both, _ = generate(params, cfg, {"tokens": prompts[:2]},
+                       SamplingConfig(max_new_tokens=max_new))
+
+    queue = RequestQueue()
+    queue.submit(Request(tokens=np.asarray(prompts[0]),
+                         max_new_tokens=max_new, arrival=0.0))
+    queue.submit(Request(tokens=np.asarray(prompts[1]),
+                         max_new_tokens=max_new, arrival=0.0))
+    # request 2 joins while 0 and 1 are mid-decode
+    queue.submit(Request(tokens=np.asarray(prompts[2]),
+                         max_new_tokens=max_new, arrival=3.0))
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=4, page_size=page, n_pages=32,
+                      max_seq=prompt_len + max_new))
+    comps = {c.rid: c for c in eng.run()}
+    rids = sorted(comps)
+    assert comps[rids[2]].t_admit == 3.0       # actually joined mid-stream
+    assert comps[rids[2]].tokens == solo.tolist()[0]
+    assert comps[rids[0]].tokens == both.tolist()[0]
+    assert comps[rids[1]].tokens == both.tolist()[1]
