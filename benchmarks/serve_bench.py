@@ -40,8 +40,9 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.models.layers import init_sparse_linear
-from repro.serve import (BatcherConfig, ContinuousBatcher, Request,
-                         RequestQueue, SparseLogitHead)
+from repro.serve import (BatcherConfig, ContinuousBatcher, FaultSchedule,
+                         Request, RequestQueue, SparseLogitHead)
+from repro.serve.faults import apply_malformed
 from repro.serve.paged_cache import pages_for
 
 RECORDS: list = []
@@ -50,13 +51,21 @@ RECORDS: list = []
 # coverage is checked both ways, so a scenario that stops running
 # fails the gate instead of silently shrinking it
 SMOKE_GOLDEN_NAMES = ("serve_qwen3-4b", "serve_recurrentgemma-9b",
-                      "serve_mamba2-2.7b", "serve_qwen3-4b_sparse_head")
+                      "serve_mamba2-2.7b", "serve_qwen3-4b_sparse_head",
+                      "serve_qwen3-4b_chaos")
 
 # scheduling arithmetic only — bit-reproducible, gated by exact match.
 # Wall-clock keys (tokens_per_sec, *_ms) are schema'd but never gated.
+# The failure-semantics counters are deterministic too (faults are keyed
+# on the virtual round clock), so the chaos scenario's preemptions /
+# sheds / retries / quarantines gate exactly like the scheduling keys —
+# and their forced zeros on the fault-free scenarios pin "no fault
+# machinery engages on a healthy workload".
 GOLDEN_KEYS = ("steps", "tokens", "admitted", "rejected", "peak_pages",
                "static_equiv_pages", "reclaimed", "occupancy",
-               "p50_latency_steps", "p99_latency_steps")
+               "p50_latency_steps", "p99_latency_steps",
+               "preemptions", "sheds", "expired", "quarantined", "errors",
+               "retries", "fallbacks")
 
 
 def _poisson_workload(cfg, rng, *, n_req: int, rate: float,
@@ -95,7 +104,7 @@ def _pool_for(cfg, reqs, *, max_slots: int, page_size: int):
 
 def run_scenario(name: str, arch: str, *, seed: int, n_req: int,
                  rate: float, max_slots: int = 4, page_size: int = 4,
-                 sparse_head: bool = False):
+                 sparse_head: bool = False, chaos: bool = False):
     cfg = get_smoke_config(arch)
     rng = np.random.default_rng(seed)
     reqs = _poisson_workload(cfg, rng, n_req=n_req, rate=rate)
@@ -103,6 +112,29 @@ def run_scenario(name: str, arch: str, *, seed: int, n_req: int,
     max_seq = pages_for(max_seq, page_size) * page_size
     n_pages = _pool_for(cfg, reqs, max_slots=max_slots,
                         page_size=page_size)
+
+    faults = None
+    if chaos:
+        # seeded chaos: transient step bursts (some past the retry
+        # budget), NaN poisoning, allocator denial, malformed prompts —
+        # all keyed on the round clock, so the counters gate exactly
+        faults = FaultSchedule.sample(
+            seed, 64, p_transient=0.1, max_burst=3, p_poison=0.08,
+            max_slot=max_slots, p_deny=0.08, n_requests=n_req,
+            p_malformed=0.15)
+        apply_malformed(reqs, faults, cfg.vocab_size, seed=seed)
+        # deadlines on a deterministic third of the workload: tight
+        # enough that backpressure (denial rounds, fallback drains)
+        # sheds some of them
+        for i, r in enumerate(reqs):
+            if i % 3 == 1:
+                r.deadline = r.arrival + 12.0
+        # shrink the pool below the worst case to force preemption, but
+        # never below what the largest single request needs to finish
+        # alone (anything less is a capacity bug, not a schedulable load)
+        biggest = max(pages_for(r.prompt_len + r.max_new_tokens,
+                                page_size) for r in reqs)
+        n_pages = max(biggest + 3, int(0.6 * n_pages))
 
     head = None
     if sparse_head:
@@ -117,7 +149,7 @@ def run_scenario(name: str, arch: str, *, seed: int, n_req: int,
         queue=queue,
         bcfg=BatcherConfig(max_slots=max_slots, page_size=page_size,
                            n_pages=n_pages, max_seq=max_seq),
-        head=head)
+        head=head, faults=faults)
 
     # drive on the virtual step clock, timing each fused step.  The
     # first steps carry compilation; ms/step uses the post-warmup tail.
@@ -163,17 +195,28 @@ def run_scenario(name: str, arch: str, *, seed: int, n_req: int,
         "p50_latency_steps": round(float(np.percentile(lat_steps, 50)), 3),
         "p99_latency_steps": round(float(np.percentile(lat_steps, 99)), 3),
         "sparse_head": bool(sparse_head),
+        "chaos": bool(chaos),
     }
+    rec.update(eng.fault_stats())      # deterministic, gated on EVERY
+    #                                    scenario (zeros pin the healthy
+    #                                    path; non-zeros pin the chaos)
     RECORDS.append(rec)
     print(f"{name},{rec['tokens_per_sec']},steps={rec['steps']}"
           f"/tok={tokens}/peak_pg={rec['peak_pages']}"
           f"of{rec['static_equiv_pages']}"
           f"/occ={rec['occupancy']:.2f}"
-          f"/p99={rec['p99_latency_steps']:.0f}st")
+          f"/p99={rec['p99_latency_steps']:.0f}st"
+          + (f"/pre={rec['preemptions']}/shed={rec['sheds']}"
+             f"/quar={rec['quarantined']}/retry={rec['retries']}"
+             f"/fb={rec['fallbacks']}" if chaos else ""))
     # the paged-memory claim, asserted on every scenario that has a KV
     # at all: peak allocation under the static per-slot equivalent
     if lm.needs_kv_pages(eng.cfg):
         assert 0 < rec["peak_pages"] < rec["static_equiv_pages"], rec
+    if chaos:
+        # the chaos must actually bite, or the scenario gates nothing
+        assert (rec["quarantined"] + rec["retries"] + rec["preemptions"]
+                + rec["sheds"] + rec["errors"]) > 0, rec
     assert eng.allocator.in_use == 0
 
 
@@ -189,6 +232,8 @@ def run(smoke: bool = False):
                  rate=0.3)
     run_scenario("serve_qwen3-4b_sparse_head", "qwen3-4b", seed=3,
                  n_req=10, rate=0.3, sparse_head=True)
+    run_scenario("serve_qwen3-4b_chaos", "qwen3-4b", seed=7, n_req=12,
+                 rate=0.5, chaos=True)
     if smoke:
         return
     # heavier load points (reported in the json, not golden-gated):

@@ -4,7 +4,13 @@ Part 1 exercises the static path (prefill a fixed batch, lock-step
 sampled decode) on a reduced hybrid model (recurrentgemma family:
 RG-LRU + rolling local-attention cache).  Part 2 drives the same model
 through the continuous-batching engine: Poisson arrivals into the
-request queue, paged KV cache, per-request retirement.
+request queue, paged KV cache, per-request retirement.  Part 3 turns
+on the failure-semantics layer: a deadline that retires a request
+mid-decode with partial output, a malformed request quarantined at
+admission, and a seeded
+FaultSchedule injecting transient step failures absorbed by
+retry-with-replay — every completion still comes back with an honest
+status.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -16,8 +22,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serve import (BatcherConfig, ContinuousBatcher, Request,
-                         RequestQueue, SamplingConfig, generate)
+from repro.serve import (BatcherConfig, ContinuousBatcher, FaultSchedule,
+                         Request, RequestQueue, SamplingConfig, generate)
 
 
 def main():
@@ -84,6 +90,31 @@ def main():
         print(f"  rid={c.rid} wait={c.queue_wait:.1f} steps "
               f"latency={c.latency:.1f} steps "
               f"finished_by={c.finished_by}")
+
+    # ---- failure semantics -----------------------------------------
+    # same engine shape, hostile inputs: one request with a deadline it
+    # cannot meet, one with a token id outside the vocab, and a seeded
+    # fault schedule that fails the fused step twice in round 2 (both
+    # replayed from host state — output unchanged).
+    queue = RequestQueue()
+    good = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    bad = good.copy()
+    bad[3] = cfg.vocab_size + 17          # quarantined at admission
+    queue.submit(Request(tokens=good, max_new_tokens=8, arrival=0.0))
+    queue.submit(Request(tokens=bad, max_new_tokens=8, arrival=0.0))
+    queue.submit(Request(tokens=good.copy(), max_new_tokens=8,
+                         arrival=0.0, deadline=1.0))  # expires mid-decode
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=8, n_pages=24, max_seq=48),
+        key=key_engine,
+        faults=FaultSchedule(transient={2: 2}))
+    comps = eng.run()
+    print("failure semantics:")
+    for c in comps:
+        print(f"  rid={c.rid} status={c.status} tokens={len(c.tokens)} "
+              f"preemptions={c.preemptions}")
+    print(f"  counters: {eng.fault_stats()}")
 
 
 if __name__ == "__main__":

@@ -244,6 +244,45 @@ class BlockCSR:
         nnzb = int(np.asarray(self.row_ptr)[-1])
         return nnzb / (self.n_block_rows * self.n_block_cols)
 
+    def check_pad_contract(self) -> "BlockCSR":
+        """Host-side validation of the BSR pad contract — the block-level
+        mirror of :meth:`CSR.check_pad_contract`.
+
+        Checks, in order: ``row_ptr`` monotone with ``nnzb`` within
+        capacity; live ``block_col`` in ``[0, n_block_cols)`` and live
+        ``block_row`` matching the row ``row_ptr`` assigns each slot; pad
+        slots carrying ``block_col = -1``, ``block_row = max(gm-1, 0)``
+        (the convention first/last-visit detection in the flattened-grid
+        kernels relies on) and all-zero payloads.  Raises ``ValueError``;
+        concrete arrays only; returns ``self`` for chaining.  Wired to
+        the kernel entry points behind ``MAPLE_VALIDATE=1`` (see
+        ``kernels.ops``) so checkpoint-loaded or hand-built operands can
+        be vetted without paying the host sync in production.
+        """
+        rptr = np.asarray(self.row_ptr)
+        nnzb = int(rptr[-1])
+        if not ((np.diff(rptr) >= 0).all() and nnzb <= self.n_blocks_max):
+            raise ValueError("row_ptr not monotone within capacity")
+        bcol = np.asarray(self.block_col)
+        brow = np.asarray(self.block_row)
+        gm = self.n_block_rows
+        if nnzb:
+            if not ((bcol[:nnzb] >= 0)
+                    & (bcol[:nnzb] < self.n_block_cols)).all():
+                raise ValueError("live block_col out of range")
+            owner = np.repeat(np.arange(gm, dtype=np.int32),
+                              np.diff(rptr.astype(np.int64)))
+            if not (brow[:nnzb] == owner).all():
+                raise ValueError("live block_row disagrees with row_ptr")
+        if not (bcol[nnzb:] == -1).all():
+            raise ValueError("pad block_col must be -1")
+        if not (brow[nnzb:] == max(gm - 1, 0)).all():
+            raise ValueError(f"pad block_row must be {max(gm - 1, 0)} "
+                             f"(last block row)")
+        if np.asarray(self.blocks)[nnzb:].any():
+            raise ValueError("pad blocks must be 0")
+        return self
+
 
 # --------------------------------------------------------------------------
 # transposes (sorted CSR in, sorted CSR out — never densified)

@@ -20,7 +20,8 @@ from typing import Dict, List, Optional
 class StragglerConfig:
     window: int = 50           # sliding window of steps
     tolerance: float = 1.5     # flag if slower than fleet median × tolerance
-    patience: int = 5          # consecutive slow steps before flagging
+    patience: int = 5          # consecutive slow (healthy) steps before
+    #                            flagging (unflagging)
 
 
 class StragglerMonitor:
@@ -28,6 +29,7 @@ class StragglerMonitor:
         self.cfg = cfg
         self.history: Dict[str, collections.deque] = {}
         self.slow_streak: Dict[str, int] = collections.defaultdict(int)
+        self.healthy_streak: Dict[str, int] = collections.defaultdict(int)
         self.flagged: List[str] = []
 
     def record(self, host: str, step_seconds: float) -> None:
@@ -43,23 +45,38 @@ class StragglerMonitor:
             return None
         return all_times[len(all_times) // 2]
 
-    def check(self) -> List[str]:
-        """Update streaks from the latest sample of each host; return newly
-        flagged hosts."""
+    def check(self) -> tuple:
+        """Update streaks from the latest sample of each host; returns
+        ``(newly_flagged, recovered)`` host lists.
+
+        A host flags after ``patience`` consecutive slow steps and —
+        symmetrically — *unflags* after ``patience`` consecutive healthy
+        steps (the hysteresis keeps a borderline host from flapping the
+        drain API every other step).  The old behavior flagged forever:
+        a host that hit one slow patch — a checkpoint write, a neighbor's
+        network burst — stayed on the preemption list for the rest of the
+        job even after thousands of healthy steps.
+        """
         base = self._baseline()
         if base is None:
-            return []
-        newly = []
+            return [], []
+        newly, recovered = [], []
         for host, dq in self.history.items():
             if dq and dq[-1] > base * self.cfg.tolerance:
                 self.slow_streak[host] += 1
+                self.healthy_streak[host] = 0
             else:
                 self.slow_streak[host] = 0
+                self.healthy_streak[host] += 1
             if (self.slow_streak[host] >= self.cfg.patience
                     and host not in self.flagged):
                 self.flagged.append(host)
                 newly.append(host)
-        return newly
+            elif (host in self.flagged
+                    and self.healthy_streak[host] >= self.cfg.patience):
+                self.flagged.remove(host)
+                recovered.append(host)
+        return newly, recovered
 
 
 class StepTimer:

@@ -18,6 +18,8 @@ API:
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +53,31 @@ def _float0(x):
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _validate_enabled() -> bool:
+    """``MAPLE_VALIDATE=1`` arms operand pad-contract checks at the kernel
+    entry points.  Off by default: the checks read values on the host, so
+    they would force a device sync (and break under jit) in production —
+    the gate is for vetting checkpoint-loaded or hand-assembled operands
+    in tests/CI, where every call is eager anyway."""
+    return os.environ.get("MAPLE_VALIDATE", "0") not in ("", "0")
+
+
+def _maybe_validate(*operands) -> None:
+    """Run ``check_pad_contract`` on each CSR/BlockCSR operand when the
+    ``MAPLE_VALIDATE`` gate is armed and the metadata is concrete (traced
+    operands are skipped — their producers were validated eagerly)."""
+    if not _validate_enabled():
+        return
+    for op in operands:
+        if isinstance(op, CSR):
+            if not _has_traced_metadata(op.value, op.col_id, op.row_ptr):
+                op.check_pad_contract()
+        elif isinstance(op, BlockCSR):
+            if not _has_traced_metadata(op.blocks, op.block_col,
+                                        op.block_row, op.row_ptr):
+                op.check_pad_contract()
 
 
 # --------------------------------------------------------------------------
@@ -147,6 +174,7 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _maybe_validate(a)
     if schedule not in ("balanced", "row_atomic", "naive", "partitioned"):
         raise ValueError(f"unknown schedule {schedule!r}")
     if schedule == "naive" and plan is not None:
@@ -711,6 +739,7 @@ def maple_spgemm(a: CSR, b: CSR, *, schedule: str = "balanced",
     if not isinstance(a, CSR) or not isinstance(b, CSR):
         raise TypeError("maple_spgemm takes CSR operands; for dense B use "
                         "maple_spmm / gustavson.spmm_rowwise")
+    _maybe_validate(a, b)
     if a.shape[1] != b.shape[0]:
         raise ValueError(
             f"contraction mismatch: A is {a.shape}, B is {b.shape}")

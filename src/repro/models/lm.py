@@ -475,13 +475,18 @@ def _apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
     return x, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, state, tokens):
+def decode_step(params, cfg: ModelConfig, state, tokens, *,
+                return_hidden: bool = False):
     """One decode step.  tokens: (B, 1) int32 → (logits, new_state).
 
     The stacked per-layer caches ride the scan CARRY with dynamic
     index/update (not xs/ys): XLA keeps carry DUS in place inside the
     while body, so the multi-GB KV cache is single-buffered (xs/ys would
     double-buffer it — measured ~2×5.4 GiB on qwen2-72b decode_32k).
+
+    ``return_hidden=True`` returns the final-norm hidden state instead
+    of logits (mirrors ``decode_step_paged`` — the serving engine's
+    static fallback path scores it with an external ``SparseLogitHead``).
     """
     unit, n_groups, tail = cfg.layer_plan()
     pos = state["pos"]
@@ -516,6 +521,8 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
         new_state["tail"] = t_cache
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    if return_hidden:
+        return x, new_state
     logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
     return shard(logits, ("batch", None, "vocab")), new_state
 

@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.csr import BlockCSR
@@ -184,9 +185,56 @@ def jitted_decode_step(cfg: ModelConfig, *, paged: bool = False,
             fn = jax.jit(functools.partial(lm.decode_step_paged, cfg=cfg,
                                            return_hidden=return_hidden))
         else:
-            fn = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+            fn = jax.jit(functools.partial(lm.decode_step, cfg=cfg,
+                                           return_hidden=return_hidden))
         _DECODE_JIT[key] = fn
     return fn
+
+
+def complete_static(params, cfg: ModelConfig, tokens, max_new: int, *,
+                    sampling: SamplingConfig, key, eos_id: int = -1,
+                    head: Optional["SparseLogitHead"] = None):
+    """Finish ONE request on the static (non-paged) path.
+
+    The continuous batcher's graceful-degradation target: when the fused
+    paged step's retry budget is exhausted, each live slot's remaining
+    tokens are produced here — batch-1 prefill over the full context
+    (prompt + tokens generated so far), then per-token ``decode_step``.
+    Greedy output is bit-identical to the paged path (the same
+    bit-identity pin the engine already carries against ``generate``);
+    sampled requests continue their own ``key`` chain, so the draw
+    sequence matches the engine's per-slot chain too.
+
+    Returns ``(new_tokens, reason, key)`` with ``reason`` in
+    ``("eos", "length", "error")`` — the non-finite-logits guard applies
+    here exactly as in the fused path.
+    """
+    tokens = np.asarray(tokens, np.int32).reshape(-1)
+    if max_new <= 0:
+        return [], "length", key
+    use_head = head is not None
+    prefill = jitted_prefill(cfg, tokens.size + max_new,
+                             return_hidden=use_head)
+    step_fn = jitted_decode_step(cfg, return_hidden=use_head)
+    out, state = prefill(params, batch={"tokens": jnp.asarray(
+        tokens, jnp.int32)[None]})
+    logits = head(out) if use_head else out
+    new_tokens: list = []
+    while True:
+        row = np.asarray(logits[:, -1])
+        if not np.isfinite(row[:, :cfg.vocab_size]).all():
+            return new_tokens, "error", key
+        key, sub = jax.random.split(key)
+        tok = int(sample_token(jnp.asarray(row), sub, sampling,
+                               cfg.vocab_size)[0])
+        new_tokens.append(tok)
+        if eos_id >= 0 and tok == eos_id:
+            return new_tokens, "eos", key
+        if len(new_tokens) >= max_new:
+            return new_tokens, "length", key
+        out, state = step_fn(params, state=state,
+                             tokens=jnp.full((1, 1), tok, jnp.int32))
+        logits = head(out) if use_head else out
 
 
 def generate(params, cfg: ModelConfig, batch: Dict[str, jax.Array],

@@ -43,6 +43,7 @@ class PageAllocator:
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._allocated: set = set()
         self.in_use = 0
         self.peak_in_use = 0
         self.total_allocs = 0
@@ -60,15 +61,35 @@ class PageAllocator:
                 f"{len(self._free)} free of {self.n_pages - 1} "
                 f"(raise n_pages, shrink max_slots, or admit less)")
         pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
         self.in_use += n
         self.total_allocs += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
     def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the free list.
+
+        Guarded: freeing the dead page, a page outside the pool, or a
+        page that is not currently allocated (double free) raises —
+        silently re-listing a page would later hand it to two slots at
+        once, i.e. silent KV corruption through the block table.  The
+        check runs over the whole batch *before* any page is re-listed,
+        so a rejected call leaves the allocator state untouched.
+        """
+        pages = list(pages)
+        seen = set()
         for pg in pages:
             if pg == DEAD_PAGE:
                 raise ValueError("freeing the dead page")
+            if not (0 < pg < self.n_pages):
+                raise ValueError(f"freeing page {pg} outside pool "
+                                 f"[1, {self.n_pages - 1}]")
+            if pg not in self._allocated or pg in seen:
+                raise ValueError(f"double free of page {pg}")
+            seen.add(pg)
+        for pg in pages:
+            self._allocated.discard(pg)
             self._free.append(pg)
         self.in_use -= len(pages)
 

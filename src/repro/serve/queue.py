@@ -14,19 +14,35 @@ Admission control happens twice:
   outgrow its slot's block table); rejects are counted, never raised.
 * at **claim** (in the batcher): a ready request is only admitted when a
   batch slot AND enough KV pages for its prompt (plus one decode page)
-  are free — otherwise it stays queued, FIFO order preserved.
+  are free — otherwise it stays queued, FIFO order preserved.  The
+  batcher additionally *sheds* queued requests whose ``deadline`` has
+  passed (``shed_expired``), quarantines malformed prompts, and
+  ``requeue``-s preempted requests — see ``serve/README.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Any, Deque, List, Optional, Sequence
 
 import numpy as np
 
 _rid_counter = itertools.count()
+
+# Completion.status values.  "ok" is reserved for callers that collapse
+# the two normal finishes; the engine itself always reports the precise
+# reason.
+STATUS_OK = "ok"
+STATUS_EOS = "eos"                           # sampled its eos_id
+STATUS_LENGTH = "length"                     # hit max_new_tokens
+STATUS_DEADLINE = "deadline_exceeded"        # shed queued / retired live
+STATUS_ERROR = "error"                       # non-finite logits quarantine
+STATUS_REJECTED = "rejected"                 # malformed prompt at admission
+STATUSES = (STATUS_OK, STATUS_EOS, STATUS_LENGTH, STATUS_DEADLINE,
+            STATUS_ERROR, STATUS_REJECTED)
 
 
 @dataclasses.dataclass
@@ -34,14 +50,32 @@ class Request:
     """One generation request.
 
     ``eos_id``/``max_new_tokens`` are per-request (a queue can mix);
-    ``arrival`` is the submit time in driver-clock units.
+    ``arrival`` is the submit time in driver-clock units.  ``deadline``
+    (absolute, same clock; ``None`` = never expires) is the last instant
+    the request may still be served: the engine sheds it from the queue
+    and retires it in flight once ``now > deadline``.
+
+    The trailing fields are preemption bookkeeping the engine owns: a
+    preempted request re-enters the queue carrying its already-sampled
+    ``generated`` tokens (resume = re-prefill over prompt + generated),
+    its sampling-key chain, and its original admit/first-token
+    timestamps, so the eventual :class:`Completion` reads as one
+    uninterrupted service span.
     """
     tokens: np.ndarray                   # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1
     arrival: float = 0.0
+    deadline: Optional[float] = None
     rid: int = dataclasses.field(
         default_factory=lambda: next(_rid_counter))
+    # --- engine-owned resume state (set on preemption) ---
+    generated: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    resume_key: Any = None               # jax PRNG key, opaque here
+    t_admit0: Optional[float] = None     # first admission timestamps
+    t_first0: Optional[float] = None
+    steps0: int = 0                      # fused steps ridden pre-preempt
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -54,19 +88,51 @@ class Request:
     def prompt_len(self) -> int:
         return int(self.tokens.size)
 
+    @property
+    def total_len(self) -> int:
+        """Context length a (re-)prefill must process: the prompt plus
+        any tokens generated before a preemption."""
+        return self.prompt_len + len(self.generated)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
+    @property
+    def deadline_or_inf(self) -> float:
+        return math.inf if self.deadline is None else self.deadline
+
 
 @dataclasses.dataclass
 class Completion:
-    """What the engine hands back when a request retires."""
+    """What the engine hands back when a request retires.
+
+    ``status`` is the failure-semantics verdict (see ``STATUSES``);
+    ``finished_by`` mirrors it for backward compatibility with the
+    pre-deadline API (where it was only ever ``"eos"``/``"length"``).
+    ``preemptions`` counts how many times the request was evicted and
+    resumed before finishing.
+    """
     rid: int
     prompt_len: int
     tokens: List[int]                    # sampled tokens, incl. final eos
-    finished_by: str                     # "eos" | "length"
+    finished_by: str                     # == status
     arrival: float
     t_admit: float
     t_first_token: float
     t_done: float
     steps: int                           # fused decode steps it rode
+    status: str = STATUS_OK
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if self.status == STATUS_OK and self.finished_by in STATUSES:
+            self.status = self.finished_by
+        if self.status not in STATUSES:
+            raise ValueError(f"unknown status {self.status!r}")
+
+    @property
+    def ok(self) -> bool:
+        return self.status in (STATUS_OK, STATUS_EOS, STATUS_LENGTH)
 
     @property
     def latency(self) -> float:
@@ -78,7 +144,7 @@ class Completion:
 
 
 class RequestQueue:
-    """Depth-bounded FIFO with arrival-time gating."""
+    """Depth-bounded FIFO with arrival-time gating and deadline sheds."""
 
     def __init__(self, max_depth: int = 256,
                  max_seq: Optional[int] = None):
@@ -88,6 +154,8 @@ class RequestQueue:
         self.accepted = 0
         self.rejected_depth = 0
         self.rejected_shape = 0
+        self.shed = 0                    # deadline-expired before admission
+        self.requeued = 0                # preemption round trips
 
     def __len__(self) -> int:
         return len(self._q)
@@ -107,6 +175,28 @@ class RequestQueue:
 
     def submit_all(self, reqs: Sequence[Request]) -> int:
         return sum(self.submit(r) for r in reqs)
+
+    def requeue(self, req: Request) -> None:
+        """Return a preempted request to the queue (back of the line —
+        it re-competes FIFO with whatever backlog exists).  Never
+        depth-rejected: the request was already accepted once and its
+        slot's memory has just been released."""
+        self._q.append(req)
+        self.requeued += 1
+
+    def shed_expired(self, now: float) -> List[Request]:
+        """Remove every queued request whose deadline has passed
+        (anywhere in the queue, not just the head — an expired head must
+        not block live requests behind it, and an expired tail is work
+        the engine should never start).  Returns them for the caller to
+        complete with ``status="deadline_exceeded"``."""
+        if not self._q:
+            return []
+        expired = [r for r in self._q if r.expired(now)]
+        if expired:
+            self._q = deque(r for r in self._q if not r.expired(now))
+            self.shed += len(expired)
+        return expired
 
     def peek_ready(self, now: float) -> Optional[Request]:
         """Head request whose arrival time has come, without removing."""

@@ -236,3 +236,82 @@ def test_blockcsr_roundtrip_property(gm, gk, density, seed):
                 d[i*bm:(i+1)*bm, j*bk:(j+1)*bk] = blk
     b = BlockCSR.from_dense(d, (bm, bk), n_blocks_max=int(mask.sum()) + 2)
     np.testing.assert_array_equal(np.asarray(b.to_dense()), d)
+
+
+# --------------------------------------------------------------------------
+# BlockCSR pad contract + the MAPLE_VALIDATE entry-point gate
+# --------------------------------------------------------------------------
+
+def _bsr_example(pad=2):
+    d = np.zeros((8, 8), np.float32)
+    d[0:4, 0:4] = 1.0
+    d[4:8, 4:8] = 2.0
+    return BlockCSR.from_dense(d, (4, 4), n_blocks_max=2 + pad), d
+
+
+def test_blockcsr_check_pad_contract_accepts_and_chains():
+    b, _ = _bsr_example()
+    assert b.check_pad_contract() is b           # returns self for chaining
+    # degenerate single-block-row matrix: pad block_row must be 0
+    d1 = np.zeros((4, 8), np.float32)
+    d1[:, :4] = 3.0
+    BlockCSR.from_dense(d1, (4, 4), n_blocks_max=3).check_pad_contract()
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda b: b.__setattr__("block_col", b.block_col.at[2].set(1)),
+     "pad block_col"),
+    (lambda b: b.__setattr__("block_row", b.block_row.at[3].set(0)),
+     "pad block_row"),
+    (lambda b: b.__setattr__("blocks", b.blocks.at[2, 0, 0].set(7.0)),
+     "pad blocks"),
+    (lambda b: b.__setattr__("row_ptr",
+                             jnp.asarray([0, 2, 1], jnp.int32)),
+     "monotone"),
+    (lambda b: b.__setattr__("block_col", b.block_col.at[0].set(5)),
+     "block_col out of range"),
+    (lambda b: b.__setattr__("block_row", b.block_row.at[0].set(1)),
+     "disagrees with row_ptr"),
+])
+def test_blockcsr_check_pad_contract_rejects(mutate, msg):
+    b, _ = _bsr_example()
+    mutate(b)
+    with pytest.raises(ValueError, match=msg):
+        b.check_pad_contract()
+
+
+def test_maple_validate_gate(monkeypatch):
+    """MAPLE_VALIDATE=1 arms operand validation at the kernel entry
+    points; unset/0 keeps the hot path check-free (a violating operand
+    then flows through, pads being inert by the naive walk's masking)."""
+    from repro.kernels import ops
+
+    good, d = _bsr_example()
+    rhs = np.eye(8, dtype=np.float32)
+    bad, _ = _bsr_example()
+    bad.blocks = bad.blocks.at[2, 0, 0].set(9.0)   # violate: pad payload
+
+    # gate off (default): no check runs — the violating operand flows
+    # into the kernel unvetted (and silently corrupts the output, which
+    # is exactly what the gate exists to catch in CI)
+    monkeypatch.delenv("MAPLE_VALIDATE", raising=False)
+    ops.maple_spmm(bad, rhs, schedule="naive")     # no raise
+
+    monkeypatch.setenv("MAPLE_VALIDATE", "1")
+    np.testing.assert_allclose(
+        np.asarray(ops.maple_spmm(good, rhs, schedule="naive")), d)
+    with pytest.raises(ValueError, match="pad blocks"):
+        ops.maple_spmm(bad, rhs, schedule="naive")
+
+    # CSR side: maple_spgemm validates both operands under the gate
+    dc = np.zeros((4, 4), np.float32)
+    dc[0, 1] = 2.0
+    a = CSR.from_dense(dc, nnz_max=3)
+    ok = np.asarray(ops.maple_spgemm(a, a).to_dense())
+    bad_csr = CSR(value=a.value.at[2].set(5.0), col_id=a.col_id,
+                  row_ptr=a.row_ptr, shape=a.shape)
+    with pytest.raises(ValueError, match="pad values"):
+        ops.maple_spgemm(a, bad_csr)
+    monkeypatch.setenv("MAPLE_VALIDATE", "0")
+    np.testing.assert_array_equal(
+        np.asarray(ops.maple_spgemm(a, bad_csr).to_dense()), ok)

@@ -14,7 +14,7 @@ def test_straggler_flags_slow_host():
         for h in range(8):
             t = 1.0 if h != 3 else (1.0 if step < 4 else 5.0)
             mon.record(f"host{h}", t)
-        flagged += mon.check()
+        flagged += mon.check()[0]
     assert flagged == ["host3"]
 
 
@@ -24,8 +24,36 @@ def test_straggler_recovers():
     for step in range(4):  # brief blip shorter than patience
         for h in range(8):
             mon.record(f"host{h}", 5.0 if (h == 2 and step < 2) else 1.0)
-        assert mon.check() == []
+        assert mon.check() == ([], [])
     assert mon.flagged == []
+
+
+def test_straggler_unflags_after_recovery():
+    """A flagged host that returns to fleet speed for `patience`
+    consecutive steps must leave the flagged list (and be reported as
+    recovered exactly once) — the pre-fix monitor kept it on the
+    preemption list forever."""
+    mon = StragglerMonitor(StragglerConfig(window=20, tolerance=1.5,
+                                           patience=3))
+    flagged, recovered = [], []
+    for step in range(12):
+        for h in range(8):
+            # host3 is slow on steps 0-4, healthy from step 5 on
+            t = 5.0 if (h == 3 and step < 5) else 1.0
+            mon.record(f"host{h}", t)
+        new, rec = mon.check()
+        flagged += new
+        recovered += rec
+    assert flagged == ["host3"]
+    assert recovered == ["host3"]
+    assert mon.flagged == []
+    # a host can flag again after recovering (streaks fully reset)
+    for step in range(5):
+        for h in range(8):
+            mon.record(f"host{h}", 5.0 if h == 3 else 1.0)
+        new, _ = mon.check()
+        flagged += new
+    assert flagged == ["host3", "host3"]
 
 
 def test_step_timer():

@@ -74,6 +74,32 @@ def test_page_allocator_freelist_and_peak():
 
 
 @pytest.mark.tier1
+def test_page_allocator_rejects_double_free():
+    """Regression: `free` used to append blindly, so a double-freed page
+    entered the free list twice and was later handed to two slots at
+    once — silent KV corruption through the block table.  Now the whole
+    batch is validated before any page is re-listed."""
+    al = PageAllocator(n_pages=8, page_size=4)
+    a = al.alloc(3)
+    al.free(a[:1])
+    with pytest.raises(ValueError, match="double free"):
+        al.free(a[:1])                        # already returned
+    with pytest.raises(ValueError, match="double free"):
+        al.free([a[1], a[1]])                 # duplicate within one batch
+    with pytest.raises(ValueError, match="outside pool"):
+        al.free([99])
+    with pytest.raises(ValueError, match="outside pool"):
+        al.free([-1])
+    # a rejected batch mutates nothing: the still-live pages free cleanly
+    assert al.in_use == 2
+    al.free(a[1:])
+    assert al.in_use == 0 and al.free_pages() == 7
+    # freed pages really are reusable (the free list holds no duplicates)
+    again = al.alloc(7)
+    assert len(set(again)) == 7
+
+
+@pytest.mark.tier1
 def test_paged_math_helpers():
     assert pages_for(1, 4) == 1 and pages_for(4, 4) == 1
     assert pages_for(5, 4) == 2

@@ -1,0 +1,346 @@
+"""Failure semantics of the serving engine: deadlines + shedding,
+preemption/resume bit-identity, poison-request quarantine, NaN-logit
+isolation, bounded retry with exact replay, graceful degradation to the
+static path, and whole-engine determinism under a seeded FaultSchedule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serve import (BatcherConfig, ContinuousBatcher, FaultSchedule,
+                         Request, RequestQueue, SamplingConfig, generate)
+from repro.serve.faults import apply_malformed, corrupt_tokens
+from repro.serve.queue import STATUS_DEADLINE, STATUS_REJECTED
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("qwen3-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, n=8, seed=3):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         0, cfg.vocab_size), np.int32)
+
+
+def _ref_tokens(params, cfg, prompt, max_new):
+    out, _ = generate(params, cfg, {"tokens": jnp.asarray(prompt)[None]},
+                      SamplingConfig(max_new_tokens=max_new))
+    return out.tolist()[0]
+
+
+# --------------------------------------------------------------------------
+# FaultSchedule itself (host-only, fast)
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_fault_schedule_sample_deterministic():
+    kw = dict(p_transient=0.3, max_burst=3, p_poison=0.2, max_slot=4,
+              p_deny=0.1, n_requests=10, p_malformed=0.2)
+    a = FaultSchedule.sample(7, 50, **kw)
+    b = FaultSchedule.sample(7, 50, **kw)
+    assert a == b                       # field-wise dataclass equality
+    c = FaultSchedule.sample(8, 50, **kw)
+    assert a != c                       # and the seed actually matters
+    assert not a.is_empty()
+    for rnd, k in a.transient.items():
+        assert 1 <= k <= 3 and 0 <= rnd < 50
+    for rnd, s in a.poison.items():
+        assert 0 <= s < 4
+    assert all(0 <= r < 50 for r in a.deny_alloc)
+    assert all(0 <= i < 10 for i in a.malformed)
+    assert FaultSchedule().is_empty()
+
+
+@pytest.mark.tier1
+def test_corrupt_tokens_and_apply_malformed():
+    rng = np.random.default_rng(0)
+    toks = np.arange(8, dtype=np.int32)
+    bad = corrupt_tokens(toks, vocab_size=100, rng=rng)
+    assert (toks == np.arange(8)).all()          # original untouched
+    assert ((bad >= 100) | (bad == toks)).all() and (bad >= 100).any()
+    reqs = [Request(tokens=np.arange(1, 5, dtype=np.int32))
+            for _ in range(3)]
+    sched = FaultSchedule(malformed=frozenset([1]))
+    assert apply_malformed(reqs, sched, vocab_size=50) == 1
+    assert (reqs[0].tokens < 50).all() and (reqs[2].tokens < 50).all()
+    assert (reqs[1].tokens >= 50).any()
+    # same seed corrupts identically (the determinism the chaos bench
+    # workload relies on)
+    reqs2 = [Request(tokens=np.arange(1, 5, dtype=np.int32))
+             for _ in range(3)]
+    apply_malformed(reqs2, sched, vocab_size=50)
+    np.testing.assert_array_equal(reqs[1].tokens, reqs2[1].tokens)
+
+
+# --------------------------------------------------------------------------
+# deadlines
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_deadline_sheds_queued_and_retires_inflight(smoke):
+    cfg, params = smoke
+    prompt = _prompt(cfg)
+    queue = RequestQueue()
+    # A hogs the single slot; B's deadline passes while it waits; C (no
+    # deadline) runs after A — FIFO order must survive B's removal
+    a = Request(tokens=prompt, max_new_tokens=10)
+    b = Request(tokens=prompt, max_new_tokens=4, deadline=3.0)
+    c = Request(tokens=prompt, max_new_tokens=3)
+    for r in (a, b, c):
+        queue.submit(r)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=1, page_size=4, n_pages=32, max_seq=32))
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert comps[b.rid].status == STATUS_DEADLINE
+    assert comps[b.rid].tokens == [] and comps[b.rid].ok is False
+    assert comps[a.rid].status == "length" and len(comps[a.rid].tokens) == 10
+    assert comps[c.rid].status == "length" and len(comps[c.rid].tokens) == 3
+    assert eng.sheds == 1 and eng.expired == 0
+    assert eng.allocator.in_use == 0
+
+    # in-flight: a request whose deadline lands mid-decode retires with
+    # its partial output, not a crash and not a stall
+    queue2 = RequestQueue()
+    d = Request(tokens=prompt, max_new_tokens=20, deadline=5.0)
+    queue2.submit(d)
+    eng2 = ContinuousBatcher(
+        params, cfg, queue2,
+        BatcherConfig(max_slots=1, page_size=4, n_pages=32, max_seq=32))
+    comps2 = eng2.run()
+    assert comps2[0].status == STATUS_DEADLINE
+    # admitted at t=0 (1 token) + decode rounds 1..5 ran before t=6>5
+    assert 0 < len(comps2[0].tokens) < 20
+    # the partial prefix is still the true greedy continuation
+    ref = _ref_tokens(params, cfg, prompt, 20)
+    assert comps2[0].tokens == ref[:len(comps2[0].tokens)]
+    assert eng2.expired == 1 and eng2.allocator.in_use == 0
+
+
+# --------------------------------------------------------------------------
+# preemption / resume
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_preemption_resume_is_bit_identical(smoke):
+    """Page pressure evicts the lowest-progress slot; the victim resumes
+    by re-prefill and its greedy output matches an uninterrupted run
+    bit-for-bit.  Pool: 5 usable pages; A alone needs all 5 at the end,
+    so B's arrival forces at least one eviction round-trip."""
+    cfg, params = smoke
+    pa, pb = _prompt(cfg, seed=3), _prompt(cfg, seed=4)
+    ref_a = _ref_tokens(params, cfg, pa, 12)
+    ref_b = _ref_tokens(params, cfg, pb, 4)
+    queue = RequestQueue()
+    a = Request(tokens=pa, max_new_tokens=12)
+    b = Request(tokens=pb, max_new_tokens=4, arrival=2.0)
+    queue.submit(a)
+    queue.submit(b)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=4, n_pages=6, max_seq=32))
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert comps[a.rid].tokens == ref_a
+    assert comps[b.rid].tokens == ref_b
+    assert comps[a.rid].status == "length"
+    assert eng.preemptions >= 1
+    assert comps[a.rid].preemptions + comps[b.rid].preemptions \
+        == eng.preemptions
+    # service-span bookkeeping survives the round trip: A's admit stamp
+    # is its FIRST admission, not the resume
+    assert comps[a.rid].t_admit == 0.0
+    assert eng.allocator.in_use == 0
+
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_preempt_disabled_blocks_instead(smoke):
+    cfg, params = smoke
+    pa, pb = _prompt(cfg, seed=3), _prompt(cfg, seed=4)
+    queue = RequestQueue()
+    a = Request(tokens=pa, max_new_tokens=12)
+    b = Request(tokens=pb, max_new_tokens=4, arrival=2.0)
+    queue.submit(a)
+    queue.submit(b)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=4, n_pages=6, max_seq=32,
+                      preempt=False))
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert eng.preemptions == 0
+    # head-of-line blocking: B simply waits for A to retire and free pages
+    assert comps[a.rid].tokens == _ref_tokens(params, cfg, pa, 12)
+    assert comps[b.rid].tokens == _ref_tokens(params, cfg, pb, 4)
+    assert comps[b.rid].t_admit > comps[a.rid].t_done - 1e-9
+
+
+# --------------------------------------------------------------------------
+# quarantine
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_malformed_request_quarantined(smoke):
+    cfg, params = smoke
+    good = _prompt(cfg)
+    bad = np.array(good, copy=True)
+    bad[3] = cfg.vocab_size + 17          # out of range → reject
+    ref = _ref_tokens(params, cfg, good, 5)
+    queue = RequestQueue()
+    rb = Request(tokens=bad, max_new_tokens=5)
+    rg = Request(tokens=good, max_new_tokens=5)
+    queue.submit(rb)
+    queue.submit(rg)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=4, n_pages=32, max_seq=32))
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert comps[rb.rid].status == STATUS_REJECTED
+    assert comps[rb.rid].tokens == [] and not comps[rb.rid].ok
+    # the co-submitted good request is untouched by the quarantine
+    assert comps[rg.rid].tokens == ref
+    assert eng.quarantined == 1
+    # negative ids are quarantined through the same gate
+    queue.submit(Request(tokens=np.array([1, -2, 3], np.int32),
+                         max_new_tokens=2))
+    comps2 = eng.run()
+    assert comps2[-1].status == STATUS_REJECTED
+    assert eng.quarantined == 2
+
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_nan_poison_isolated_to_one_slot(smoke):
+    """A slot whose logits go non-finite retires with status="error";
+    the co-resident slot's greedy output stays bit-identical."""
+    cfg, params = smoke
+    pa, pb = _prompt(cfg, seed=5), _prompt(cfg, seed=6)
+    ref_b = _ref_tokens(params, cfg, pb, 8)
+    queue = RequestQueue()
+    a = Request(tokens=pa, max_new_tokens=8)
+    b = Request(tokens=pb, max_new_tokens=8)
+    queue.submit(a)
+    queue.submit(b)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=4, n_pages=32, max_seq=32),
+        faults=FaultSchedule(poison={2: 0}))   # slot 0 = first admission
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert comps[a.rid].status == "error"
+    # admission token + rounds 0 and 1 decoded; round 2's sample refused
+    assert len(comps[a.rid].tokens) == 3
+    assert comps[a.rid].tokens == _ref_tokens(params, cfg, pa, 8)[:3]
+    assert comps[b.rid].status == "length"
+    assert comps[b.rid].tokens == ref_b       # bit-identical co-resident
+    assert eng.errors == 1
+    assert eng.allocator.in_use == 0
+
+
+# --------------------------------------------------------------------------
+# retry + graceful degradation
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_transient_failures_absorbed_by_retry(smoke):
+    cfg, params = smoke
+    prompt = _prompt(cfg)
+    ref = _ref_tokens(params, cfg, prompt, 8)
+    queue = RequestQueue()
+    queue.submit(Request(tokens=prompt, max_new_tokens=8))
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=1, page_size=4, n_pages=32, max_seq=32,
+                      max_retries=2),
+        faults=FaultSchedule(transient={1: 2, 4: 1}))
+    comps = eng.run()
+    # replay is exact: a retried round commits the same state and tokens
+    assert comps[0].tokens == ref
+    assert comps[0].status == "length"
+    assert eng.retries == 3 and eng.fallbacks == 0
+
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_retry_exhaustion_degrades_to_static_path(smoke):
+    """A fault burst longer than max_retries drains the live slots on
+    the static per-request path — same tokens, one `fallbacks` tick."""
+    cfg, params = smoke
+    pa, pb = _prompt(cfg, seed=5), _prompt(cfg, seed=6)
+    queue = RequestQueue()
+    a = Request(tokens=pa, max_new_tokens=8)
+    b = Request(tokens=pb, max_new_tokens=6)
+    queue.submit(a)
+    queue.submit(b)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=2, page_size=4, n_pages=32, max_seq=32,
+                      max_retries=2),
+        faults=FaultSchedule(transient={2: 3}))   # 3 > max_retries
+    comps = {cp.rid: cp for cp in eng.run()}
+    assert eng.fallbacks == 1 and eng.retries == 2
+    assert comps[a.rid].tokens == _ref_tokens(params, cfg, pa, 8)
+    assert comps[b.rid].tokens == _ref_tokens(params, cfg, pb, 6)
+    assert comps[a.rid].status == "length"
+    assert comps[b.rid].status == "length"
+    assert eng.allocator.in_use == 0          # drain freed every page
+
+
+# --------------------------------------------------------------------------
+# whole-engine determinism under chaos
+# --------------------------------------------------------------------------
+
+def _chaos_run(params, cfg, seed=11):
+    rng = np.random.default_rng(seed)
+    sched = FaultSchedule.sample(seed, 40, p_transient=0.15, max_burst=2,
+                                 p_poison=0.1, max_slot=3, p_deny=0.1,
+                                 n_requests=8, p_malformed=0.2)
+    reqs = []
+    for i in range(8):
+        n = int(rng.integers(2, 10))
+        reqs.append(Request(
+            tokens=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 8)),
+            arrival=float(rng.integers(0, 6)),
+            deadline=(float(rng.integers(8, 30))
+                      if rng.random() < 0.5 else None)))
+    apply_malformed(reqs, sched, cfg.vocab_size, seed=seed)
+    queue = RequestQueue()
+    queue.submit_all(reqs)
+    eng = ContinuousBatcher(
+        params, cfg, queue,
+        BatcherConfig(max_slots=3, page_size=4, n_pages=48, max_seq=32,
+                      max_retries=1),
+        faults=sched)
+    comps = eng.run()
+    # rid is a process-global counter, so key on submission order instead
+    order = {r.rid: i for i, r in enumerate(reqs)}
+    sig = sorted((order[c.rid], c.prompt_len, tuple(c.tokens), c.status,
+                  c.preemptions, c.steps) for c in comps)
+    return sig, dict(eng.fault_stats(), steps=eng.steps,
+                     admitted=eng.admitted)
+
+
+@pytest.mark.tier1
+@pytest.mark.slow
+def test_engine_deterministic_under_fault_schedule(smoke):
+    """Two engines fed the same seeded schedule + workload produce the
+    identical completion set, statuses, and scheduling metrics — the
+    property that lets CI gate the chaos bench exactly."""
+    cfg, params = smoke
+    sig1, stats1 = _chaos_run(params, cfg)
+    sig2, stats2 = _chaos_run(params, cfg)
+    assert sig1 == sig2
+    assert stats1 == stats2
+    assert len(sig1) == 8                     # every request accounted for
+    statuses = {s for _, _, _, s, _, _ in sig1}
+    assert "rejected" in statuses             # the chaos actually bit
+    assert stats1["retries"] > 0
