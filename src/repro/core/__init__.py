@@ -3,6 +3,16 @@ event model, the four §IV accelerator configurations and the
 Accelergy-style energy/area model."""
 
 from repro.core.csr import CSR, BlockCSR
+from repro.core.formats import (
+    BitmapBlocked,
+    EllPack,
+    SparseFormat,
+    as_block_csr,
+    as_element_csr,
+    from_dense,
+    to_bitmap,
+    to_ell,
+)
 from repro.core.gustavson import (
     dense_oracle,
     spmm_rowwise,
@@ -24,7 +34,9 @@ from repro.core.dataflows import (
 from repro.core import energy, sparsity
 
 __all__ = [
-    "CSR", "BlockCSR", "spmm_rowwise", "spmspm_rowwise",
+    "CSR", "BlockCSR", "EllPack", "BitmapBlocked", "SparseFormat",
+    "from_dense", "as_block_csr", "as_element_csr", "to_ell", "to_bitmap",
+    "spmm_rowwise", "spmspm_rowwise",
     "spmspm_rowwise_scan", "dense_oracle", "EventCounts", "SpGEMMStats",
     "analyze_spgemm", "AccelConfig", "SimResult", "Comparison", "simulate",
     "compare", "matraptor_baseline", "matraptor_maple", "extensor_baseline",

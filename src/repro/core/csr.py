@@ -15,7 +15,8 @@ Beyond the containers, this module owns the *sorted-CSR compute utilities*
 that make CSR a real compute format for the SpGEMM pipeline: column-merge
 accumulation (:func:`merge_by_column`), upper-bound output-row sizing
 (:func:`spgemm_row_upper_bounds`), the capacity growth policy
-(:func:`grow_nnz_max`) and the ELL slot map (:func:`ell_slots`) that lets a
+(:func:`grow_nnz_max`) and — as a deprecated shim, see ``core.formats``
+for the canonical home — the ELL slot map (:func:`ell_slots`) that lets a
 kernel gather padded rows without ever densifying to ``(K, N)``.
 """
 
@@ -474,24 +475,12 @@ def grow_nnz_max(required: int, current: int = 0, *, floor: int = 8) -> int:
 
 
 def ell_slots(row_ptr, width: int | None = None):
-    """Gather map from padded-CSR slots to an ``(n_rows, width)`` ELL grid.
+    """Deprecated shim — the ELL slot map now lives in
+    :func:`repro.core.formats.ell_slots` (the format layer's canonical
+    home).  Import from there; this alias stays for older callers.
 
-    Returns ``(idx, live)``: ``idx[i, t]`` is the index into the CSR nnz
-    arrays of row i's t-th entry (0 — any valid slot — where dead) and
-    ``live[i, t]`` marks real entries.  Host-side numpy over metadata, so
-    the *values* gather ``value[idx] * live`` stays traceable under jit —
-    this is how the numeric SpGEMM phase regularizes operands without
-    touching host copies of device values.
+    The import is deferred because ``core.formats`` imports the
+    containers from this module.
     """
-    rptr = np.asarray(row_ptr).astype(np.int64)
-    lens = np.diff(rptr)
-    lmax = int(lens.max(initial=0))
-    if width is None:
-        width = max(lmax, 1)
-    elif lmax > width:
-        raise ValueError(f"width={width} < longest row ({lmax})")
-    width = max(int(width), 1)
-    offs = np.arange(width, dtype=np.int64)[None, :]
-    idx = rptr[:-1, None] + offs
-    live = offs < lens[:, None]
-    return np.where(live, idx, 0).astype(np.int32), live
+    from repro.core.formats import ell_slots as _ell_slots
+    return _ell_slots(row_ptr, width)

@@ -1,0 +1,658 @@
+"""Multi-format sparse storage behind one ``SparseFormat`` protocol.
+
+"Extending Sparse Tensor Accelerators to Support Multiple Compression
+Formats" (PAPERS.md) argues a single engine should consume CSR / ELL /
+bitmap operands without conversion round trips through dense.  This module
+is that format layer for the Maple stack: :class:`EllPack` and
+:class:`BitmapBlocked` join ``core.csr.BlockCSR`` as first-class *blocked*
+storage formats, all satisfying the same :class:`SparseFormat` protocol
+(static shape + block metadata, ``to_dense``, a validated pad contract,
+and participation in ``kernels.schedule.pattern_fingerprint`` via
+:func:`block_pattern_meta`).
+
+The kernels never see any of this: ``plan_spmm`` / ``ops.maple_spmm``
+accept any blocked format and lower it onto the existing compact kernel
+through :func:`as_block_csr` — a host-metadata walk plus one traced payload
+gather (zero-copy where the layouts already agree), never a dense round
+trip.  ``maple_spgemm`` accepts blocked operands through
+:func:`as_element_csr` the same way.
+
+Conversion lattice (all lossless)::
+
+              to_ell ──────────────►
+    BlockCSR ◄────────── EllPack        BitmapBlocked
+        ▲  ◄── to_bitmap ──►  ▲               │
+        └──────── as_block_csr (canonical meeting point) ◄──┘
+
+Every converter lands live blocks in **canonical order** — block-row major,
+ascending block-column within a row — so the packed payloads of two
+equivalent containers are element-for-element identical and execution is
+bit-identical across formats (pinned in ``tests/test_formats.py``).
+
+This module also owns the element-granular ELL utilities that previously
+lived in ``core.csr`` (:func:`ell_slots`) and ``kernels.ops``
+(:func:`csr_to_ell`); the old locations remain as deprecation shims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CSR, BlockCSR
+
+
+@runtime_checkable
+class SparseFormat(Protocol):
+    """Structural protocol every storage format satisfies.
+
+    A format is a pytree (payload traced, pattern static aux), knows its
+    dense ``shape``, can densify (:meth:`to_dense`) and can validate its
+    own pad contract (:meth:`check_pad_contract`, host-side, raising
+    ``ValueError``).  *Blocked* formats additionally carry ``block_shape``
+    and participate in :func:`block_pattern_meta` — the shared metadata
+    view ``pattern_fingerprint`` hashes, so equivalent patterns fingerprint
+    identically regardless of storage format.
+    """
+
+    shape: Tuple[int, int]
+
+    def to_dense(self) -> jax.Array: ...
+
+    def check_pad_contract(self) -> "SparseFormat": ...
+
+
+#: The blocked formats ``plan_spmm`` / ``maple_spmm`` accept directly.
+BLOCK_FORMATS: tuple = ()  # filled in below, after the classes exist
+
+BlockFormat = Union["BlockCSR", "EllPack", "BitmapBlocked"]
+
+
+def _has_traced(*arrays) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in arrays)
+
+
+def _require_host(what: str, *arrays) -> None:
+    if _has_traced(*arrays):
+        raise ValueError(
+            f"{what} walks host pattern metadata and cannot run under "
+            f"jit — convert outside the trace and close the jitted call "
+            f"over the result")
+
+
+# --------------------------------------------------------------------------
+# EllPack: fixed-width block rows
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EllPack:
+    """Blocked ELLPACK: every block-row padded to a fixed slot ``width``.
+
+    ``blocks[R, t]`` is the ``(bm, bk)`` payload of block-row R's t-th
+    live block and ``block_col[R, t]`` its block-column.  The regular
+    ``(gm, width)`` grid is the format's point: slot addresses are an
+    affine function of (row, t), which is what a hardware PE's ELL fetch
+    unit exploits — no row_ptr indirection on the metadata path.
+
+    **Pad contract**: per block-row the live slots form a *contiguous
+    prefix* with **strictly ascending** block-columns (the canonical
+    order shared by every blocked format — it makes packed payload order
+    unique and the cross-format fingerprint stable); dead slots carry
+    ``block_col = -1`` and zero payload; live columns lie in
+    ``[0, n_block_cols)``.
+    """
+
+    blocks: jax.Array     # (gm, width, bm, bk)
+    block_col: jax.Array  # (gm, width) int32, -1 on dead slots
+    shape: Tuple[int, int]        # dense (M, K)
+    block_shape: Tuple[int, int]  # (bm, bk)
+
+    def tree_flatten(self):
+        return (self.blocks, self.block_col), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        blocks, block_col = children
+        return cls(blocks, block_col, aux[0], aux[1])
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @property
+    def width(self) -> int:
+        return self.blocks.shape[1]
+
+    @classmethod
+    def from_dense(cls, dense, block_shape: Tuple[int, int],
+                   width: int | None = None) -> "EllPack":
+        """Host-side conversion; raises if ``width`` can't hold the
+        longest block-row (ELL is lossless here — no silent truncation)."""
+        dense = np.asarray(dense)
+        m, k = dense.shape
+        bm, bk = block_shape
+        if m % bm or k % bk:
+            raise ValueError(
+                f"dense {dense.shape} not divisible by {block_shape}")
+        gm, gk = m // bm, k // bk
+        tiles = dense.reshape(gm, bm, gk, bk).transpose(0, 2, 1, 3)
+        nz_mask = np.abs(tiles).sum(axis=(2, 3)) != 0     # (gm, gk)
+        lens = nz_mask.sum(axis=1)
+        lmax = int(lens.max(initial=0))
+        if width is None:
+            width = max(lmax, 1)
+        elif lmax > width:
+            raise ValueError(f"width={width} < longest block-row ({lmax})")
+        width = max(int(width), 1)
+        blocks = np.zeros((gm, width, bm, bk), dtype=dense.dtype)
+        block_col = np.full((gm, width), -1, dtype=np.int32)
+        rows, cols = np.nonzero(nz_mask)                  # row-major, sorted
+        offs = np.arange(rows.size) - np.repeat(
+            np.concatenate([[0], np.cumsum(lens)[:-1]]), lens)
+        blocks[rows, offs] = tiles[rows, cols]
+        block_col[rows, offs] = cols
+        return cls(blocks=jnp.asarray(blocks),
+                   block_col=jnp.asarray(block_col),
+                   shape=(m, k), block_shape=(bm, bk))
+
+    def to_dense(self) -> jax.Array:
+        """Device-side scatter back to dense (works under jit)."""
+        bm, bk = self.block_shape
+        gm, gk = self.n_block_rows, self.n_block_cols
+        valid = self.block_col >= 0
+        c = jnp.where(valid, self.block_col, 0)
+        r = jnp.broadcast_to(
+            jnp.arange(gm, dtype=jnp.int32)[:, None], self.block_col.shape)
+        payload = jnp.where(valid[..., None, None], self.blocks, 0)
+        tiles = jnp.zeros((gm, gk, bm, bk), dtype=self.blocks.dtype)
+        tiles = tiles.at[r, c].add(payload)
+        return tiles.transpose(0, 2, 1, 3).reshape(gm * bm, gk * bk)
+
+    def density(self) -> float:
+        """Host-side block density (fraction of non-zero blocks)."""
+        nnzb = int((np.asarray(self.block_col) >= 0).sum())
+        return nnzb / (self.n_block_rows * self.n_block_cols)
+
+    def check_pad_contract(self) -> "EllPack":
+        """Host-side validation of the ELL pad contract (class docstring).
+        Raises ``ValueError``; concrete arrays only; returns ``self``."""
+        bcol = np.asarray(self.block_col)
+        live = bcol >= 0
+        if (bcol[~live] != -1).any():
+            raise ValueError("dead block_col must be -1")
+        # contiguous live prefix: no live slot may follow a dead one
+        if (live[:, 1:] & ~live[:, :-1]).any():
+            raise ValueError("live slots must form a contiguous prefix "
+                             "per block-row")
+        if (bcol[live] >= self.n_block_cols).any():
+            raise ValueError("live block_col out of range")
+        # strictly ascending live columns per row (canonical order)
+        both = live[:, 1:] & live[:, :-1]
+        if (bcol[:, 1:][both] <= bcol[:, :-1][both]).any():
+            raise ValueError("live block_col must be strictly ascending "
+                             "per block-row")
+        if np.asarray(self.blocks)[~live].any():
+            raise ValueError("dead-slot blocks must be 0")
+        return self
+
+    def to_block_csr(self, n_blocks_max: int | None = None) -> BlockCSR:
+        """Lossless ELL → BlockCSR lowering.
+
+        Pattern is walked on the host (raises on traced metadata); the
+        payload moves through one traced gather, so the values may be
+        tracers.  Because the ELL live prefix is already in canonical
+        order, the row-major walk of live slots *is* BlockCSR packed
+        order — the output payload is element-for-element the one
+        ``BlockCSR.from_dense`` would build.
+        """
+        _require_host("EllPack.to_block_csr", self.block_col)
+        gm = self.n_block_rows
+        bm, bk = self.block_shape
+        bcol = np.asarray(self.block_col)
+        live = bcol >= 0
+        lens = live.sum(axis=1)
+        nnzb = int(lens.sum())
+        cap = max(nnzb, 1) if n_blocks_max is None else int(n_blocks_max)
+        if cap < nnzb:
+            raise ValueError(f"n_blocks_max={cap} < nnz blocks={nnzb}")
+        r_idx, t_idx = np.nonzero(live)                   # row-major walk
+        block_col = np.full((cap,), -1, np.int32)
+        block_col[:nnzb] = bcol[r_idx, t_idx]
+        block_row = np.full((cap,), max(gm - 1, 0), np.int32)
+        block_row[:nnzb] = r_idx
+        row_ptr = np.zeros((gm + 1,), np.int32)
+        np.cumsum(np.bincount(r_idx, minlength=gm), out=row_ptr[1:])
+        blocks = jnp.zeros((cap, bm, bk), self.blocks.dtype)
+        if nnzb:
+            blocks = blocks.at[:nnzb].set(
+                self.blocks[jnp.asarray(r_idx), jnp.asarray(t_idx)])
+        return BlockCSR(blocks=blocks, block_col=jnp.asarray(block_col),
+                        block_row=jnp.asarray(block_row),
+                        row_ptr=jnp.asarray(row_ptr),
+                        shape=self.shape, block_shape=self.block_shape)
+
+
+# --------------------------------------------------------------------------
+# BitmapBlocked: occupancy bitmap + packed payload
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitmapBlocked:
+    """Bitmap-blocked storage: a ``(gm, gk)`` occupancy bitmap plus the
+    live payloads packed in bitmap **row-major order**.
+
+    That packing order is exactly BlockCSR's canonical order (block-row
+    major, ascending block-column — ``np.nonzero`` on the bitmap), so
+    lowering to BlockCSR is metadata-only: the payload array is reused
+    as-is (genuine zero-copy) whenever the capacity matches.
+
+    **Pad contract**: ``blocks.shape[0] >= bitmap.sum()`` and every slot
+    past the live count is zero payload.
+    """
+
+    blocks: jax.Array   # (n_blocks_max, bm, bk), bitmap row-major packed
+    bitmap: jax.Array   # (gm, gk) bool
+    shape: Tuple[int, int]        # dense (M, K)
+    block_shape: Tuple[int, int]  # (bm, bk)
+
+    def tree_flatten(self):
+        return (self.blocks, self.bitmap), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        blocks, bitmap = children
+        return cls(blocks, bitmap, aux[0], aux[1])
+
+    @property
+    def n_blocks_max(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @classmethod
+    def from_dense(cls, dense, block_shape: Tuple[int, int],
+                   n_blocks_max: int | None = None) -> "BitmapBlocked":
+        dense = np.asarray(dense)
+        m, k = dense.shape
+        bm, bk = block_shape
+        if m % bm or k % bk:
+            raise ValueError(
+                f"dense {dense.shape} not divisible by {block_shape}")
+        gm, gk = m // bm, k // bk
+        tiles = dense.reshape(gm, bm, gk, bk).transpose(0, 2, 1, 3)
+        bitmap = np.abs(tiles).sum(axis=(2, 3)) != 0      # (gm, gk)
+        rows, cols = np.nonzero(bitmap)
+        nnzb = rows.size
+        cap = max(int(nnzb), 1) if n_blocks_max is None else int(n_blocks_max)
+        if nnzb > cap:
+            raise ValueError(f"nnz blocks {nnzb} > n_blocks_max {cap}")
+        blocks = np.zeros((cap, bm, bk), dtype=dense.dtype)
+        blocks[:nnzb] = tiles[rows, cols]
+        return cls(blocks=jnp.asarray(blocks),
+                   bitmap=jnp.asarray(bitmap),
+                   shape=(m, k), block_shape=(bm, bk))
+
+    def to_dense(self) -> jax.Array:
+        """Densify via the BlockCSR lowering (host bitmap walk + traced
+        payload scatter — the payload may be a tracer, the bitmap not)."""
+        return self.to_block_csr().to_dense()
+
+    def density(self) -> float:
+        """Host-side block density (fraction of non-zero blocks)."""
+        nnzb = int(np.asarray(self.bitmap).sum())
+        return nnzb / (self.n_block_rows * self.n_block_cols)
+
+    def check_pad_contract(self) -> "BitmapBlocked":
+        """Host-side validation of the bitmap pad contract (class
+        docstring).  Raises ``ValueError``; concrete arrays only."""
+        nnzb = int(np.asarray(self.bitmap).sum())
+        if nnzb > self.n_blocks_max:
+            raise ValueError(
+                f"bitmap has {nnzb} live blocks > capacity "
+                f"{self.n_blocks_max}")
+        if np.asarray(self.blocks)[nnzb:].any():
+            raise ValueError("pad blocks must be 0")
+        return self
+
+    def to_block_csr(self, n_blocks_max: int | None = None) -> BlockCSR:
+        """Metadata-only bitmap → BlockCSR lowering.
+
+        ``np.nonzero`` on the bitmap *is* canonical packed order, so the
+        payload array is passed through untouched (zero-copy) when the
+        requested capacity equals the stored one; a different capacity
+        re-pads through one traced copy.
+        """
+        _require_host("BitmapBlocked.to_block_csr", self.bitmap)
+        gm = self.n_block_rows
+        bmp = np.asarray(self.bitmap)
+        rows, cols = np.nonzero(bmp)
+        nnzb = rows.size
+        cap = self.n_blocks_max if n_blocks_max is None else int(n_blocks_max)
+        if cap < nnzb:
+            raise ValueError(f"n_blocks_max={cap} < nnz blocks={nnzb}")
+        block_col = np.full((cap,), -1, np.int32)
+        block_col[:nnzb] = cols
+        block_row = np.full((cap,), max(gm - 1, 0), np.int32)
+        block_row[:nnzb] = rows
+        row_ptr = np.zeros((gm + 1,), np.int32)
+        np.cumsum(np.bincount(rows, minlength=gm), out=row_ptr[1:])
+        if cap == self.n_blocks_max:
+            blocks = self.blocks                          # zero-copy
+        else:
+            bm, bk = self.block_shape
+            blocks = jnp.zeros((cap, bm, bk), self.blocks.dtype)
+            if nnzb:
+                blocks = blocks.at[:nnzb].set(self.blocks[:nnzb])
+        return BlockCSR(blocks=blocks, block_col=jnp.asarray(block_col),
+                        block_row=jnp.asarray(block_row),
+                        row_ptr=jnp.asarray(row_ptr),
+                        shape=self.shape, block_shape=self.block_shape)
+
+
+BLOCK_FORMATS = (BlockCSR, EllPack, BitmapBlocked)
+
+
+# --------------------------------------------------------------------------
+# converters (the lattice; BlockCSR is the canonical meeting point)
+# --------------------------------------------------------------------------
+
+def _bcsr_live_meta(a: BlockCSR):
+    """Host ``(rows, cols, nnzb)`` of the live blocks, validated for the
+    canonical-order assumptions the converters rely on (within-row
+    ascending columns, no duplicates)."""
+    _require_host("format conversion", a.row_ptr, a.block_col)
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnzb = int(rptr[-1])
+    cols = np.asarray(a.block_col)[:nnzb].astype(np.int64)
+    rows = np.repeat(np.arange(a.n_block_rows, dtype=np.int64),
+                     np.diff(rptr))
+    same_row = rows[1:] == rows[:-1]
+    if (cols[1:][same_row] == cols[:-1][same_row]).any():
+        raise ValueError("duplicate block coordinates in operand")
+    return rows, cols, nnzb
+
+
+def as_block_csr(a: BlockFormat,
+                 n_blocks_max: int | None = None) -> BlockCSR:
+    """Lower any blocked format onto canonical BlockCSR.
+
+    This is the one lowering the planners and kernels use: BlockCSR
+    passes through untouched, ELL and bitmap operands lower via their
+    ``to_block_csr`` (host metadata + at most one traced payload gather —
+    never a dense round trip).
+    """
+    if isinstance(a, BlockCSR):
+        if n_blocks_max is not None and n_blocks_max != a.n_blocks_max:
+            raise ValueError(
+                "as_block_csr does not re-pad an existing BlockCSR")
+        return a
+    if isinstance(a, (EllPack, BitmapBlocked)):
+        return a.to_block_csr(n_blocks_max)
+    raise TypeError(f"not a blocked sparse format: {type(a).__name__}")
+
+
+def to_ell(a: BlockFormat, width: int | None = None) -> EllPack:
+    """Convert any blocked format to :class:`EllPack` (lossless — raises
+    if ``width`` can't hold the longest block-row)."""
+    if isinstance(a, EllPack):
+        if width is not None and width != a.width:
+            raise ValueError("to_ell does not re-pad an existing EllPack")
+        return a
+    b = as_block_csr(a)
+    rows, cols, nnzb = _bcsr_live_meta(b)
+    gm = b.n_block_rows
+    bm, bk = b.block_shape
+    rptr = np.asarray(b.row_ptr)
+    idx, live = ell_slots(rptr, width)                    # (gm, width)
+    w = idx.shape[1]
+    block_col = np.full((gm, w), -1, np.int32)
+    block_col[live] = cols[idx[live]]
+    # canonical order requires ascending columns within each row — a
+    # sorted BlockCSR maps slot-order to prefix-order directly; an
+    # unsorted one gets its per-row walk sorted here
+    order = np.argsort(block_col + np.where(
+        block_col < 0, np.int64(2) * b.n_block_cols + 2, 0), axis=1,
+        kind="stable")
+    block_col = np.take_along_axis(block_col, order, axis=1)
+    src = np.where(live, idx, 0)
+    src = np.take_along_axis(src, order, axis=1)
+    live = np.take_along_axis(live, order, axis=1)
+    payload = b.blocks[jnp.asarray(src)]                  # (gm, w, bm, bk)
+    payload = jnp.where(jnp.asarray(live)[..., None, None], payload, 0)
+    return EllPack(blocks=payload, block_col=jnp.asarray(block_col),
+                   shape=b.shape, block_shape=b.block_shape)
+
+
+def to_bitmap(a: BlockFormat,
+              n_blocks_max: int | None = None) -> BitmapBlocked:
+    """Convert any blocked format to :class:`BitmapBlocked`.
+
+    When the source payload is already in canonical packed order at the
+    target capacity (always true for ``from_dense``-built or
+    converter-built containers) the payload is reused as-is (zero-copy);
+    otherwise one traced gather re-packs it.
+    """
+    if isinstance(a, BitmapBlocked):
+        if n_blocks_max is not None and n_blocks_max != a.n_blocks_max:
+            raise ValueError(
+                "to_bitmap does not re-pad an existing BitmapBlocked")
+        return a
+    b = as_block_csr(a)
+    rows, cols, nnzb = _bcsr_live_meta(b)
+    gm, gk = b.n_block_rows, b.n_block_cols
+    bitmap = np.zeros((gm, gk), bool)
+    bitmap[rows, cols] = True
+    cap = b.n_blocks_max if n_blocks_max is None else int(n_blocks_max)
+    if cap < nnzb:
+        raise ValueError(f"n_blocks_max={cap} < nnz blocks={nnzb}")
+    # canonical packed order = sorted (row, col); identity perm + matching
+    # capacity means the source payload is already the packed payload
+    perm = np.lexsort((cols, rows))
+    if cap == b.n_blocks_max and (perm == np.arange(nnzb)).all():
+        blocks = b.blocks                                 # zero-copy
+    else:
+        bm, bk = b.block_shape
+        blocks = jnp.zeros((cap, bm, bk), b.blocks.dtype)
+        if nnzb:
+            blocks = blocks.at[:nnzb].set(b.blocks[jnp.asarray(perm)])
+    return BitmapBlocked(blocks=blocks, bitmap=jnp.asarray(bitmap),
+                         shape=b.shape, block_shape=b.block_shape)
+
+
+def block_pattern_meta(a: BlockFormat):
+    """Format-independent pattern view: ``(shape, block_shape, row_ptr,
+    live_cols)`` with ``row_ptr`` int64 and ``live_cols`` int32 in
+    canonical order.
+
+    This is the view ``kernels.schedule.pattern_fingerprint`` hashes —
+    two equivalent patterns produce byte-identical metadata here whatever
+    format holds them, so plan caches and the autotuner memoization key
+    on *pattern*, not storage.  Host metadata only (raises on tracers).
+    """
+    if isinstance(a, BlockCSR):
+        _require_host("block_pattern_meta", a.row_ptr, a.block_col)
+        rptr = np.asarray(a.row_ptr).astype(np.int64)
+        nnzb = int(rptr[-1])
+        live_cols = np.asarray(a.block_col)[:nnzb].astype(np.int32)
+    elif isinstance(a, EllPack):
+        _require_host("block_pattern_meta", a.block_col)
+        bcol = np.asarray(a.block_col)
+        live = bcol >= 0
+        lens = live.sum(axis=1)
+        rptr = np.zeros((a.n_block_rows + 1,), np.int64)
+        np.cumsum(lens, out=rptr[1:])
+        live_cols = bcol[live].astype(np.int32)           # row-major walk
+    elif isinstance(a, BitmapBlocked):
+        _require_host("block_pattern_meta", a.bitmap)
+        bmp = np.asarray(a.bitmap)
+        rows, cols = np.nonzero(bmp)
+        rptr = np.zeros((a.n_block_rows + 1,), np.int64)
+        np.cumsum(bmp.sum(axis=1), out=rptr[1:])
+        live_cols = cols.astype(np.int32)
+    else:
+        raise TypeError(
+            f"not a blocked sparse format: {type(a).__name__}")
+    return a.shape, a.block_shape, rptr, live_cols
+
+
+def as_element_csr(a, nnz_max: int | None = None) -> CSR:
+    """Lower any format onto element-granular padded :class:`CSR`.
+
+    CSR passes through untouched.  A blocked operand expands every live
+    block into its ``bm × bk`` explicit elements (including explicit
+    zeros inside live blocks — blocked storage is element-lossless only
+    at block granularity, and ``maple_spgemm``'s symbolic phase needs the
+    exact stored pattern).  Pattern expansion happens on the host in
+    canonical order (sorted columns per element row); the payload moves
+    through one traced gather.
+    """
+    if isinstance(a, CSR):
+        if nnz_max is not None and nnz_max != a.nnz_max:
+            raise ValueError(
+                "as_element_csr does not re-pad an existing CSR")
+        return a
+    b = as_block_csr(a)
+    rows, cols, nnzb = _bcsr_live_meta(b)
+    gm = b.n_block_rows
+    bm, bk = b.block_shape
+    m, k = b.shape
+    rptr = np.asarray(b.row_ptr).astype(np.int64)
+    # per-(block-row) walk sorted by column for the sorted-CSR invariant
+    order = np.lexsort((cols, rows))                      # stable
+    s_rows = rows[order]
+    s_cols = cols[order]
+    lens_b = np.diff(rptr)                                # live blocks / row
+    nnz_e = nnzb * bm * bk
+    cap = max(nnz_e, 1) if nnz_max is None else int(nnz_max)
+    if cap < nnz_e:
+        raise ValueError(f"nnz_max={cap} < nnz={nnz_e}")
+    row_lens_e = np.repeat(lens_b, bm) * bk               # (gm*bm,)
+    row_ptr_e = np.zeros((m + 1,), np.int64)
+    np.cumsum(row_lens_e, out=row_ptr_e[1:])
+    col_id = np.full((cap,), -1, np.int32)
+    value = jnp.zeros((cap,), b.blocks.dtype)
+    if nnzb:
+        p = np.arange(nnzb, dtype=np.int64)
+        p_local = p - rptr[:-1][s_rows]                   # rank within row
+        P = np.broadcast_to(p[:, None, None], (nnzb, bm, bk))
+        r_i = np.broadcast_to(np.arange(bm)[None, :, None], (nnzb, bm, bk))
+        k_i = np.broadcast_to(np.arange(bk)[None, None, :], (nnzb, bm, bk))
+        e_row = s_rows[P] * bm + r_i
+        flat = row_ptr_e[e_row] + p_local[P] * bk + k_i
+        col_id[flat.ravel()] = (s_cols[P] * bk + k_i).ravel()
+        gather_slot = np.zeros((nnz_e,), np.int64)
+        gather_r = np.zeros((nnz_e,), np.int64)
+        gather_k = np.zeros((nnz_e,), np.int64)
+        gather_slot[flat.ravel()] = order[P].ravel()      # packed slot index
+        gather_r[flat.ravel()] = r_i.ravel()
+        gather_k[flat.ravel()] = k_i.ravel()
+        value = value.at[:nnz_e].set(
+            b.blocks[jnp.asarray(gather_slot), jnp.asarray(gather_r),
+                     jnp.asarray(gather_k)])
+    return CSR(value=value, col_id=jnp.asarray(col_id),
+               row_ptr=jnp.asarray(row_ptr_e.astype(np.int32)),
+               shape=(m, k))
+
+
+def from_dense(dense, block_shape: Tuple[int, int] | None = None, *,
+               format: str = "bcsr", **kw):
+    """One front door from dense to any storage format.
+
+    ``format`` is one of ``"bcsr"`` (:class:`~repro.core.csr.BlockCSR`,
+    the default), ``"ell"``, ``"bitmap"`` or element-granular ``"csr"``.
+    Blocked formats require ``block_shape``; extra keywords go to the
+    format's own ``from_dense`` (``n_blocks_max=`` / ``width=`` /
+    ``nnz_max=``).
+    """
+    blocked = {"bcsr": BlockCSR.from_dense, "ell": EllPack.from_dense,
+               "bitmap": BitmapBlocked.from_dense}
+    if format in blocked:
+        if block_shape is None:
+            raise ValueError(f"format={format!r} requires block_shape")
+        return blocked[format](dense, block_shape, **kw)
+    if format == "csr":
+        if block_shape is not None:
+            raise ValueError("format='csr' is element-granular; "
+                             "drop block_shape")
+        return CSR.from_dense(dense, **kw)
+    raise ValueError(f"unknown format {format!r}; "
+                     f"expected bcsr | ell | bitmap | csr")
+
+
+# --------------------------------------------------------------------------
+# element-granular ELL utilities (canonical home; core.csr / kernels.ops
+# keep deprecation shims)
+# --------------------------------------------------------------------------
+
+def ell_slots(row_ptr, width: int | None = None):
+    """Gather map from padded-CSR slots to an ``(n_rows, width)`` ELL grid.
+
+    Returns ``(idx, live)``: ``idx[i, t]`` is the index into the CSR nnz
+    arrays of row i's t-th entry (0 — any valid slot — where dead) and
+    ``live[i, t]`` marks real entries.  Host-side numpy over metadata, so
+    the *values* gather ``value[idx] * live`` stays traceable under jit —
+    this is how the numeric SpGEMM phase regularizes operands without
+    touching host copies of device values.
+    """
+    rptr = np.asarray(row_ptr).astype(np.int64)
+    lens = np.diff(rptr)
+    lmax = int(lens.max(initial=0))
+    if width is None:
+        width = max(lmax, 1)
+    elif lmax > width:
+        raise ValueError(f"width={width} < longest row ({lmax})")
+    width = max(int(width), 1)
+    offs = np.arange(width, dtype=np.int64)[None, :]
+    idx = rptr[:-1, None] + offs
+    live = offs < lens[:, None]
+    return np.where(live, idx, 0).astype(np.int32), live
+
+
+def csr_to_ell(a: CSR, max_row_len: int | None = None, *,
+               truncate: bool = False):
+    """Host-side CSR → ELL regularization (values/cols as (M, L)).
+
+    ``max_row_len`` narrower than the longest row drops that row's tail
+    entries — silent data loss — so it raises unless the caller opts in
+    with ``truncate=True``.
+    """
+    rptr = np.asarray(a.row_ptr)
+    vals = np.asarray(a.value)
+    cols = np.asarray(a.col_id)
+    m = a.shape[0]
+    lens = np.diff(rptr)
+    nnz = int(rptr[-1])
+    longest = int(lens.max(initial=0))
+    if max_row_len is None:
+        lmax = max(longest, 1)
+    else:
+        lmax = max(max_row_len, 1)
+        if longest > lmax and not truncate:
+            raise ValueError(
+                f"max_row_len={max_row_len} would drop entries of a row "
+                f"with {longest} non-zeros; pass truncate=True to opt in")
+    ell_v = np.zeros((m, lmax), dtype=vals.dtype)
+    ell_c = np.full((m, lmax), -1, dtype=np.int32)
+    idx = np.arange(nnz)
+    row = np.repeat(np.arange(m), lens)
+    offs = idx - np.repeat(rptr[:-1], lens)
+    keep = offs < lmax
+    ell_v[row[keep], offs[keep]] = vals[:nnz][keep]
+    ell_c[row[keep], offs[keep]] = cols[:nnz][keep]
+    return jnp.asarray(ell_v), jnp.asarray(ell_c)

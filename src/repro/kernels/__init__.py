@@ -16,6 +16,8 @@ from repro.kernels.ops import (
 from repro.kernels.partition import (PartitionedSpmmPlan,
                                      plan_partitioned_spmm,
                                      plan_partitioned_spmm_vjp)
+from repro.kernels.reorder import (RowReorder, apply_reorder,
+                                   plan_reordered_spmm, reorder_rows)
 from repro.kernels.schedule import (ExecutionPlan, SpgemmPlan, SpmmPlan,
                                     SpmmTrainPlan, bsr_stats,
                                     pattern_fingerprint, plan_spgemm,
@@ -27,6 +29,8 @@ __all__ = ["maple_spmm", "maple_spgemm", "maple_spmspm", "moe_expert_gemm",
            "SpmmPlan", "SpgemmPlan", "SpmmTrainPlan", "PartitionedSpmmPlan",
            "bsr_stats", "plan_spmm", "plan_spgemm", "plan_spmm_vjp",
            "plan_partitioned_spmm", "plan_partitioned_spmm_vjp",
+           "RowReorder", "reorder_rows", "apply_reorder",
+           "plan_reordered_spmm",
            "pattern_fingerprint", "spmm_knob_space", "SearchReport",
            "auto_plan", "plan_search", "plan_search_vjp", "plan_cache_clear",
            "plan_cache_stats", "fit_calibration", "load_calibration",

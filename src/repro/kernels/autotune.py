@@ -47,6 +47,8 @@ from repro.core.csr import BlockCSR
 from repro.kernels.partition import (PartitionedSpmmPlan,
                                      plan_partitioned_spmm,
                                      plan_partitioned_spmm_vjp)
+from repro.kernels.reorder import (occupancy_digest, pattern_standin,
+                                   plan_reordered_spmm, reorder_rows)
 from repro.kernels.schedule import (SpmmPlan, SpmmTrainPlan, _default_chunk,
                                     pattern_fingerprint, plan_spmm,
                                     plan_spmm_vjp, spmm_knob_space)
@@ -57,7 +59,7 @@ DEFAULT_BUDGET = 32
 # config the search must never lose to (always built, always scored)
 DEFAULT_CONFIG: Dict = dict(n_lanes=8, chunk=None, row_atomic=False,
                             fused="rmw", n_shards=1, n_col_shards=1,
-                            device_chunk=None)
+                            device_chunk=None, reorder=False)
 
 
 # --------------------------------------------------------------------------
@@ -154,10 +156,21 @@ def _prescore(row_lens: np.ndarray, cfg: Dict) -> float:
     return float(max(-(-nnzb // (shards * lanes)), item))
 
 
-def build_plan(a: BlockCSR, cfg: Dict):
+def build_plan(a: BlockCSR, cfg: Dict, rr=None):
     """Materialize one knob config into its plan (single-device or
-    partitioned — the config's ``n_shards`` / ``n_col_shards`` decide)."""
+    partitioned — the config's ``n_shards`` / ``n_col_shards`` decide).
+    Reorder configs plan on the permuted pattern and carry their
+    :class:`~repro.kernels.reorder.RowReorder`; pass a precomputed ``rr``
+    to amortize the similarity pass across the rung's configs."""
     col = int(cfg.get("n_col_shards", 1))
+    if cfg.get("reorder"):
+        if int(cfg["n_shards"]) > 1 or col > 1:
+            raise ValueError(
+                "reorder is a single-device knob (spmm_knob_space never "
+                "pairs it with shard counts); see ROADMAP item 2")
+        return plan_reordered_spmm(
+            a, rr, n_lanes=int(cfg["n_lanes"]), chunk=cfg["chunk"],
+            row_atomic=bool(cfg["row_atomic"]), fused=cfg["fused"])
     if int(cfg["n_shards"]) > 1 or col > 1:
         return plan_partitioned_spmm(
             a, n_shards=int(cfg["n_shards"]), n_lanes=int(cfg["n_lanes"]),
@@ -258,6 +271,7 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
                 n_lanes_max: int = 16,
                 shard_counts: Optional[Sequence[int]] = None,
                 col_shard_counts: Optional[Sequence[int]] = None,
+                reorder: bool | str = False,
                 measure: bool = False, top_k: int = 3, reps: int = 4,
                 n_cols: int = 128, seed: int = 0,
                 calibration: Optional[Dict] = None,
@@ -286,6 +300,17 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     cached for the same pattern, and vice versa.  A hit returns the
     *same* plan object.  ``full=True`` returns ``(plan, SearchReport)``.
 
+    ``reorder`` adds the similarity-based row-reordering pass
+    (``kernels.reorder``) to the space: ``"auto"`` enumerates both
+    reordered and unreordered schedules and lets the surrogate pick
+    (reordering shrinks the live block set, which the cycle model prices
+    directly), ``True`` restricts the single-device configs to reordered
+    ones.  Reordered candidates are prescored on the *permuted* row
+    lengths, and — because a reorder refines the pattern to the payload's
+    occupancy — the cache key additionally carries
+    :func:`~repro.kernels.reorder.occupancy_digest`, so a cached
+    reordered plan is only served to the occupancy it was built from.
+
     Host-side over static metadata like every planner — raises on traced
     metadata, so call it outside jit and close the returned plan over
     your jitted step.
@@ -301,10 +326,17 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     if col_shard_counts is None:
         col_shard_counts = _mesh_col_shard_counts()
     col_shard_counts = tuple(int(s) for s in col_shard_counts)
+    if reorder not in (False, True, "auto"):
+        raise ValueError(f"reorder must be False, True or 'auto', "
+                         f"got {reorder!r}")
 
     key = (pattern_fingerprint(a), "fwd", objective, int(budget),
            int(n_lanes_max), shard_counts, col_shard_counts, bool(measure),
-           int(top_k), int(n_cols), int(seed))
+           int(top_k), int(n_cols), int(seed), str(reorder))
+    if reorder is not False:
+        # a reorder is occupancy-pinned; the pattern fingerprint alone
+        # would let payloads with different element occupancy collide
+        key = key + (occupancy_digest(a),)
     if use_cache and key in _PLAN_CACHE:
         _CACHE_STATS["hits"] += 1
         hit = _PLAN_CACHE[key]
@@ -315,14 +347,24 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     # ---- rung 1: free analytic prescore over the full enumeration ----
     cfgs = spmm_knob_space(a, n_lanes_max=n_lanes_max,
                            shard_counts=shard_counts,
-                           col_shard_counts=col_shard_counts)
+                           col_shard_counts=col_shard_counts,
+                           reorder=reorder)
     default_cfg = _default_config_for(shard_counts, col_shard_counts)
     row_lens = np.diff(np.asarray(a.row_ptr).astype(np.int64))
+    rr = None
+    row_lens_r = row_lens
+    if any(c.get("reorder") for c in cfgs):
+        # one similarity pass shared by every reordered candidate; the
+        # prescore must see the *permuted* row lengths (the reordered
+        # schedule runs on the refined pattern, not the original)
+        rr = reorder_rows(a)
+        row_lens_r = np.diff(np.asarray(rr.row_ptr).astype(np.int64))
     rng = np.random.default_rng(seed)
     jitter = rng.random(len(cfgs))  # deterministic tie-break within a rung
     ranked = sorted(range(len(cfgs)),
-                    key=lambda i: (_prescore(row_lens, cfgs[i]),
-                                   jitter[i]))
+                    key=lambda i: (_prescore(
+                        row_lens_r if cfgs[i].get("reorder") else row_lens,
+                        cfgs[i]), jitter[i]))
     survivors = ranked[:budget]
     if not any(_same_config(cfgs[i], default_cfg) for i in survivors):
         # never-worse guarantee: the baseline is always built and scored
@@ -338,7 +380,7 @@ def plan_search(a: BlockCSR, *, objective: str = "cycles",
     scored: List[Tuple[Tuple[float, float], int, object]] = []
     default_score = None
     for i in survivors:
-        plan = build_plan(a, cfgs[i])
+        plan = build_plan(a, cfgs[i], rr=rr)
         s = surrogate_cost(plan, objective=objective, n_cols=n_cols,
                            calibration=calibration)
         scored.append((s, i, plan))
@@ -399,12 +441,24 @@ def plan_search_vjp(a: BlockCSR, **kw) -> SpmmTrainPlan:
     cfg = report.best_config
     key = ("train", report.fingerprint, report.objective,
            tuple(sorted((k, str(v)) for k, v in cfg.items())))
+    if cfg.get("reorder"):
+        key = key + (occupancy_digest(a),)
     if use_cache and key in _PLAN_CACHE:
         _CACHE_STATS["hits"] += 1
         hit = _PLAN_CACHE[key]
         rep = dataclasses.replace(hit.report, cache_hit=True)
         return (hit.plan, rep) if full else hit.plan
-    if int(cfg["n_shards"]) > 1 or int(cfg.get("n_col_shards", 1)) > 1:
+    if cfg.get("reorder"):
+        # the kernel executes the *permuted* container (ops applies the
+        # plan's RowReorder before _spmm_call), so the transpose-side
+        # schedules and gather maps must be built on the permuted
+        # pattern; the reorder-carrying forward plan rides along as
+        # train.fwd, which is where ops looks it up after the unwrap
+        tp = plan_spmm_vjp(pattern_standin(fwd_plan.reorder),
+                           n_lanes=int(cfg["n_lanes"]), chunk=cfg["chunk"],
+                           row_atomic=bool(cfg["row_atomic"]),
+                           fused=cfg["fused"], fwd=fwd_plan)
+    elif int(cfg["n_shards"]) > 1 or int(cfg.get("n_col_shards", 1)) > 1:
         tp = plan_partitioned_spmm_vjp(
             a, n_shards=int(cfg["n_shards"]), n_lanes=int(cfg["n_lanes"]),
             chunk=cfg["chunk"], device_chunk=cfg["device_chunk"],

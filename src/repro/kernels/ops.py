@@ -26,6 +26,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import formats
 from repro.core.csr import CSR, BlockCSR, grow_nnz_max
 from repro.distributed.sharding import partition_mesh
 from repro.kernels.block_attn import (block_attention_pallas,
@@ -42,6 +43,7 @@ from repro.kernels.moe_gemm import moe_gemm_pallas
 from repro.kernels.partition import (PartitionedSpmmPlan,
                                      plan_partitioned_spmm,
                                      plan_partitioned_spmm_vjp)
+from repro.kernels.reorder import apply_reorder
 from repro.kernels.schedule import (SpgemmPlan, SpmmPlan, SpmmTrainPlan,
                                     plan_spgemm, plan_spmm, plan_spmm_vjp)
 
@@ -74,9 +76,10 @@ def _maybe_validate(*operands) -> None:
         if isinstance(op, CSR):
             if not _has_traced_metadata(op.value, op.col_id, op.row_ptr):
                 op.check_pad_contract()
-        elif isinstance(op, BlockCSR):
-            if not _has_traced_metadata(op.blocks, op.block_col,
-                                        op.block_row, op.row_ptr):
+        elif isinstance(op, (BlockCSR, formats.EllPack,
+                             formats.BitmapBlocked)):
+            if not _has_traced_metadata(
+                    *jax.tree_util.tree_leaves(op)):
                 op.check_pad_contract()
 
 
@@ -94,14 +97,23 @@ def _pad_cols(b: jax.Array, bn: int) -> tuple[jax.Array, int]:
     return b, n
 
 
-def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
+def maple_spmm(a: "formats.BlockFormat", b_dense: jax.Array, *,
+               bn: int = 128,
                schedule: str = "balanced", n_lanes: int = 8,
                chunk: int | None = None, n_shards: int | None = None,
                n_col_shards: int | None = None,
                plan: SpmmPlan | SpmmTrainPlan | PartitionedSpmmPlan
                | None = None,
+               reorder: bool | str = False,
                interpret: bool | None = None) -> jax.Array:
     """C = A_bsr @ B with the Maple block dataflow.  Differentiable.
+
+    ``a`` is any blocked :class:`~repro.core.formats.SparseFormat` —
+    ``BlockCSR``, ``EllPack`` or ``BitmapBlocked``.  Non-BlockCSR
+    operands lower onto the canonical metadata via
+    ``core.formats.as_block_csr`` at entry (host pattern walk + one
+    traced payload gather, never a dense round trip), so all three
+    formats execute bit-identically through the same kernels.
 
     ``b_dense`` is one ``(K, N)`` right-hand side or a batch ``(G, K, N)``
     of them sharing A's structure (the inference shape — one kernel launch,
@@ -144,6 +156,18 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     ``plan="auto"``, ``n_shards`` bounds the searched device axis rather
     than pinning it (the search may conclude one device wins).
 
+    ``reorder`` rides ``plan="auto"`` only: it is the autotuner's
+    similarity-based row-reordering knob (``kernels.reorder``) —
+    ``True`` forces the permuted schedule, ``"auto"`` lets the surrogate
+    accept or reject it, ``False`` (default) disables it.  A winning
+    reordered plan carries its :class:`~repro.kernels.reorder.RowReorder`;
+    this wrapper permutes A's block-rows before the kernel and inverts
+    the permutation on the output rows after it, so results stay equal to
+    the unpermuted execution (see ``kernels/README.md`` for the exact
+    bitwise contract).  Prebuilt reordered plans
+    (``kernels.reorder.plan_reordered_spmm``) are accepted through
+    ``plan=`` like any other.
+
     **Autodiff** (``jax.custom_vjp``): ``dB = A^T @ dC`` runs the same
     planned kernel on the transposed block pattern, and ``dA`` is the
     pattern-sampled ``(dC @ B^T)|_{nnz(A)}`` block SDDMM
@@ -175,11 +199,21 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     if interpret is None:
         interpret = _default_interpret()
     _maybe_validate(a)
+    if not isinstance(a, BlockCSR):
+        # ELL / bitmap operands lower onto the canonical metadata here —
+        # one host pattern walk plus one traced payload gather
+        a = formats.as_block_csr(a)
     if schedule not in ("balanced", "row_atomic", "naive", "partitioned"):
         raise ValueError(f"unknown schedule {schedule!r}")
     if schedule == "naive" and plan is not None:
         raise ValueError("schedule='naive' does not execute a plan; "
                          "drop `plan` or pick a planned schedule")
+    if reorder is not False and not (isinstance(plan, str)
+                                     and plan == "auto"):
+        raise ValueError(
+            "reorder is an autotune knob and requires plan='auto'; to "
+            "run a reordered schedule directly, prebuild it with "
+            "kernels.reorder.plan_reordered_spmm and pass it as `plan`")
     auto_planned = False
     if isinstance(plan, str):
         if plan != "auto":
@@ -193,7 +227,8 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
                 "over the returned plan")
         # lazy import: autotune builds on this module's executor
         from repro.kernels.autotune import auto_plan
-        plan = auto_plan(a, n_shards=n_shards, n_col_shards=n_col_shards)
+        plan = auto_plan(a, n_shards=n_shards, n_col_shards=n_col_shards,
+                         reorder=reorder)
         auto_planned = True
     if (n_shards is not None or n_col_shards is not None) \
             and not auto_planned:
@@ -235,6 +270,20 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     if isinstance(plan, SpmmTrainPlan):
         train = plan
         plan = train.fwd
+
+    # a reordered plan carries its RowReorder: permute A's block-rows
+    # before the kernel (host metadata + one traced payload gather; the
+    # gather sits outside the custom_vjp, so autodiff scatters dA back
+    # to the original slots for free) and invert the permutation on the
+    # output rows after it
+    rr = getattr(plan, "reorder", None) if plan is not None else None
+    if rr is not None:
+        if rr.shape != a.shape or rr.block_shape != a.block_shape:
+            raise ValueError(
+                f"reordered plan was built for {rr.shape} / blocks "
+                f"{rr.block_shape}, operand is {a.shape} / blocks "
+                f"{a.block_shape} — was it built for this weight?")
+        a = apply_reorder(a, rr)
 
     # planning walks host metadata; under jit (traced row_ptr) a planned
     # schedule needs a prebuilt plan — otherwise fall back to the naive
@@ -307,6 +356,10 @@ def maple_spmm(a: BlockCSR, b_dense: jax.Array, *, bn: int = 128,
     out = _spmm_call(a, b3, plan=plan, train_thunk=train_thunk, bn=bn,
                      interpret=interpret)
     out = out[..., :n_orig]
+    if rr is not None:
+        # undo the row permutation: permuted-output row p holds true row
+        # rr.perm[p], so true row i is gathered from position rr.inv[i]
+        out = jnp.take(out, jnp.asarray(rr.inv), axis=-2)
     return out if batched else out[0]
 
 
@@ -671,36 +724,12 @@ def _spmm_call(a: BlockCSR, b3, *, plan, train_thunk, bn, interpret):
 
 def csr_to_ell(a: CSR, max_row_len: int | None = None, *,
                truncate: bool = False):
-    """Host-side CSR → ELL regularization (values/cols as (M, L)).
-
-    ``max_row_len`` narrower than the longest row drops that row's tail
-    entries — silent data loss — so it raises unless the caller opts in
-    with ``truncate=True``.
-    """
-    rptr = np.asarray(a.row_ptr)
-    vals = np.asarray(a.value)
-    cols = np.asarray(a.col_id)
-    m = a.shape[0]
-    lens = np.diff(rptr)
-    nnz = int(rptr[-1])
-    longest = int(lens.max(initial=0))
-    if max_row_len is None:
-        lmax = max(longest, 1)
-    else:
-        lmax = max(max_row_len, 1)
-        if longest > lmax and not truncate:
-            raise ValueError(
-                f"max_row_len={max_row_len} would drop entries of a row "
-                f"with {longest} non-zeros; pass truncate=True to opt in")
-    ell_v = np.zeros((m, lmax), dtype=vals.dtype)
-    ell_c = np.full((m, lmax), -1, dtype=np.int32)
-    idx = np.arange(nnz)
-    row = np.repeat(np.arange(m), lens)
-    offs = idx - np.repeat(rptr[:-1], lens)
-    keep = offs < lmax
-    ell_v[row[keep], offs[keep]] = vals[:nnz][keep]
-    ell_c[row[keep], offs[keep]] = cols[:nnz][keep]
-    return jnp.asarray(ell_v), jnp.asarray(ell_c)
+    """Deprecated shim — CSR → ELL regularization now lives in
+    :func:`repro.core.formats.csr_to_ell` (the format layer's canonical
+    home, shared with ``maple_spgemm``'s ELL panels).  Import from
+    there; this alias stays for older callers."""
+    from repro.core.formats import csr_to_ell as _csr_to_ell
+    return _csr_to_ell(a, max_row_len, truncate=truncate)
 
 
 def _has_traced_metadata(*arrays) -> bool:
@@ -712,6 +741,11 @@ def maple_spgemm(a: CSR, b: CSR, *, schedule: str = "balanced",
                  nnz_max: int | None = None,
                  interpret: bool | None = None) -> CSR:
     """C = A_csr @ B_csr → **padded CSR** via the two-phase Maple SpGEMM.
+
+    Operands may also be any blocked :class:`~repro.core.formats
+    .SparseFormat` (``BlockCSR`` / ``EllPack`` / ``BitmapBlocked``);
+    they lower to the element pattern they store via
+    ``core.formats.as_element_csr`` at entry.
 
     The symbolic phase (``kernels.schedule.plan_spgemm``) walks A and B
     metadata on the host: exact output pattern, bounded PSB width, and the
@@ -736,10 +770,21 @@ def maple_spgemm(a: CSR, b: CSR, *, schedule: str = "balanced",
     """
     if interpret is None:
         interpret = _default_interpret()
-    if not isinstance(a, CSR) or not isinstance(b, CSR):
-        raise TypeError("maple_spgemm takes CSR operands; for dense B use "
-                        "maple_spmm / gustavson.spmm_rowwise")
+
+    def _as_csr(op):
+        if isinstance(op, CSR):
+            return op
+        if isinstance(op, formats.BLOCK_FORMATS):
+            # blocked operands expand to the element pattern they store
+            # (host metadata + one traced value gather — never dense)
+            return formats.as_element_csr(op)
+        raise TypeError(
+            "maple_spgemm takes CSR (or blocked SparseFormat) operands; "
+            "for dense B use maple_spmm / gustavson.spmm_rowwise")
+
     _maybe_validate(a, b)
+    a = _as_csr(a)
+    b = _as_csr(b)
     if a.shape[1] != b.shape[0]:
         raise ValueError(
             f"contraction mismatch: A is {a.shape}, B is {b.shape}")
@@ -946,7 +991,7 @@ def maple_spmspm(a: CSR, b, *, interpret: bool | None = None) -> jax.Array:
             dense = dense.at[jnp.asarray(rows), jnp.asarray(cols)].set(
                 c.value[:nnz_c])
         return dense
-    values, col_ids = csr_to_ell(a)
+    values, col_ids = formats.csr_to_ell(a)
     b_rows = b.to_dense() if isinstance(b, CSR) else b
     return maple_spmspm_pallas(values, col_ids, b_rows, interpret=interpret)
 

@@ -1,0 +1,308 @@
+"""Similarity-based row reordering: manufacture dense blocks before planning.
+
+"Blocking Techniques for SpMM on Tensor Accelerators" (PAPERS.md) shows
+that on tensor-core-class hardware the win is not skipping zeros inside a
+block but *not fetching blocks at all* — and that permuting similar rows
+next to each other is how you manufacture the dense blocks that make the
+block-granular dataflow pay.  This module is that pass for the Maple
+stack, expressed entirely under the existing ``ExecutionPlan`` layer:
+
+1. :func:`reorder_rows` clusters element rows by Jaccard similarity of
+   their **block-column signatures** (greedy nearest-neighbour chaining —
+   deterministic, O(M²) over host metadata + payload occupancy) and
+   returns a :class:`RowReorder`: the permutation, its inverse, the
+   permuted block pattern, and the payload gather maps that rebuild the
+   permuted container from the original one.
+2. :func:`apply_reorder` materializes the permuted :class:`BlockCSR`
+   (host metadata + one traced payload gather — jit/grad-composable, the
+   gather sits outside the kernels' ``custom_vjp`` so cotangents scatter
+   back to the original slots automatically).
+3. :func:`plan_reordered_spmm` plans on the permuted pattern and attaches
+   the :class:`RowReorder` to the plan (``plan.reorder``);
+   ``ops.maple_spmm`` sees the attribute, permutes A's rows before the
+   kernel and un-permutes the output rows after it.
+
+The pass is priced by the same surrogate as every other schedule knob:
+``kernels.autotune.plan_search`` enumerates it through
+``spmm_knob_space(reorder=...)`` and accepts it only when the permuted
+plan's predicted cycles (fewer live blocks → fewer block-MAC steps) beat
+the unpermuted plan's.
+
+**Numerics contract** (pinned in ``tests/test_formats.py``): output row
+``i`` of a matmul depends only on input row ``i``, and the kernels'
+per-step block-MAC reduction order is fixed by the plan — so a permuted
+execution computes, per row, the same contributions in the same shapes.
+Reordering may interleave *exact-zero* contributions (a row grouped into
+a block whose other rows own a column it doesn't), which can only flip a
+zero's sign (``-0.0`` vs ``+0.0`` — equal under ``==``).  Therefore:
+
+* **row-atomic schedules** (rows never split across lanes) are
+  *bit-identical* (``np.array_equal``) to the unpermuted row-atomic
+  execution;
+* **chunked schedules** split rows differently before/after the
+  permutation and reassociate the f32 row sum, so permuted-vs-unpermuted
+  agreement is ``allclose`` — exactly the tolerance already accepted
+  between any two chunked plans of one operand.
+
+**Occupancy refinement.** The permuted pattern keeps a block column only
+where the grouped rows actually hold data, so reordering *refines* the
+block pattern: positions whose entire permuted row-group is zero across
+a block column are dropped.  Dropped positions contribute nothing
+forward (bit-identical — zeros in, zeros out) and, like any position
+outside the block pattern, receive **zero gradient** through a reordered
+plan (the ``apply_reorder`` gather never reads them, so no cotangent
+flows back); positions the refined pattern still covers get the same
+gradient as the unreordered SDDMM.  A reordered plan is therefore
+pinned to the *occupancy* it was built from, not just the block pattern
+— which is why :func:`occupancy_digest` joins the pattern fingerprint
+in the autotuner's cache key, and why a value that is exactly ``0.0``
+at plan time (along with its whole group) stays frozen under that plan,
+exactly as block-pattern zeros always have.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import BlockCSR
+from repro.core.formats import as_block_csr
+from repro.kernels.schedule import SpmmPlan, plan_spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class RowReorder:
+    """A row permutation plus everything needed to execute under it.
+
+    ``perm[p]`` is the **original** element row stored at permuted
+    position ``p``; ``inv = argsort(perm)`` takes original row ``i`` to
+    its permuted position (so the executor's inverse gather is
+    ``out[..., i, :] = out_p[..., inv[i], :]``).  The permuted block
+    pattern (``block_col`` / ``block_row`` / ``row_ptr``, container pad
+    contract upheld) is what plans are built on; the ``src_*`` maps
+    rebuild the permuted payload from the original container with one
+    traced gather (``src_block[s, r]`` / ``src_row[s, r]`` name the
+    original slot and local row feeding permuted slot ``s``'s local row
+    ``r``; ``src_live`` is False where the original block is dead — the
+    gathered row is zeroed).
+
+    ``density_before`` / ``density_after`` report **intra-block fill**
+    (live elements over live-block capacity): the quantity reordering
+    exists to raise — fewer, fuller blocks.
+    """
+
+    perm: np.ndarray        # (M,) int32 — permuted position -> original row
+    inv: np.ndarray         # (M,) int32 — original row -> permuted position
+    block_col: np.ndarray   # (n_blocks_max,) int32, -1 pads
+    block_row: np.ndarray   # (n_blocks_max,) int32, pad rows = last
+    row_ptr: np.ndarray     # (n_block_rows + 1,) int32
+    src_block: np.ndarray   # (n_blocks_max, bm) int32
+    src_row: np.ndarray     # (n_blocks_max, bm) int32
+    src_live: np.ndarray    # (n_blocks_max, bm) bool
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+    density_before: float
+    density_after: float
+
+    @property
+    def n_blocks_max(self) -> int:
+        return self.block_col.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.row_ptr[-1])
+
+
+def occupancy_digest(a) -> str:
+    """SHA-256 of the per-row live-block occupancy bitmap — the exact
+    payload view :func:`reorder_rows` derives its signatures from.
+
+    ``pattern_fingerprint`` is deliberately payload-blind, but a reorder
+    is not: two payloads sharing one block pattern can occupy different
+    rows inside the live blocks and so deserve different permutations
+    (and different refined patterns).  The autotuner mixes this digest
+    into its cache key whenever the reorder knob is searched, so a
+    cached reordered plan is only ever served to the occupancy it was
+    built from.
+    """
+    import hashlib
+
+    a = as_block_csr(a)
+    if isinstance(a.blocks, jax.core.Tracer) or \
+            isinstance(a.row_ptr, jax.core.Tracer):
+        raise ValueError(
+            "occupancy_digest reads the concrete payload and cannot run "
+            "under jit — search reordered plans outside the trace")
+    nnzb = int(np.asarray(a.row_ptr)[-1])
+    occ = np.abs(np.asarray(a.blocks)[:nnzb]).sum(axis=2) != 0
+    return hashlib.sha256(
+        np.packbits(occ.reshape(-1)).tobytes()).hexdigest()
+
+
+def reorder_rows(a) -> RowReorder:
+    """Greedy similarity chaining over element-row block signatures.
+
+    Accepts any blocked format (lowered via ``as_block_csr``).  Needs the
+    **concrete payload** (per-row occupancy inside live blocks decides
+    each element row's signature), so it raises on traced operands —
+    like planning, run it outside jit, once per weight.
+
+    Algorithm: each non-empty element row gets a boolean block-column
+    signature; rows are chained greedily — start at the most-populated
+    row, repeatedly append the unvisited row with the highest Jaccard
+    similarity to the current one (ties break to the lowest row index, so
+    the pass is deterministic).  Empty rows are appended last in index
+    order, which compacts them into trailing all-empty block-rows —
+    those plan to zero work.  O(M²) host time/memory; M is the element
+    row count, fine at the sizes the bench and tests run.
+    """
+    a = as_block_csr(a)
+    if isinstance(a.blocks, jax.core.Tracer) or \
+            isinstance(a.row_ptr, jax.core.Tracer) or \
+            isinstance(a.block_col, jax.core.Tracer):
+        raise ValueError(
+            "reorder_rows reads host metadata and payload occupancy and "
+            "cannot run under jit — reorder outside the trace, once per "
+            "weight, and close the jitted call over the plan")
+    m, k = a.shape
+    bm, bk = a.block_shape
+    gm, gk = a.n_block_rows, a.n_block_cols
+    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    nnzb = int(rptr[-1])
+    bcol = np.asarray(a.block_col)[:nnzb].astype(np.int64)
+    brow = np.repeat(np.arange(gm, dtype=np.int64), np.diff(rptr))
+    blocks_h = np.asarray(a.blocks)[:nnzb]
+
+    # element-row block signatures from per-row occupancy of live blocks
+    sig = np.zeros((m, gk), bool)
+    if nnzb:
+        occ = np.abs(blocks_h).sum(axis=2) != 0           # (nnzb, bm)
+        el = brow[:, None] * bm + np.arange(bm, dtype=np.int64)[None, :]
+        sig[el[occ], np.broadcast_to(bcol[:, None], occ.shape)[occ]] = True
+    pop = sig.sum(axis=1)
+
+    nonempty = np.nonzero(pop > 0)[0]
+    if nonempty.size:
+        s = sig[nonempty].astype(np.float64)
+        inter = s @ s.T                                   # (ne, ne)
+        p = pop[nonempty].astype(np.float64)
+        union = p[:, None] + p[None, :] - inter
+        sim = inter / np.maximum(union, 1.0)
+        n = nonempty.size
+        visited = np.zeros(n, bool)
+        cur = int(np.argmax(p))            # densest row; argmax = lowest tie
+        chain = [cur]
+        visited[cur] = True
+        for _ in range(n - 1):
+            cand = np.where(visited, -1.0, sim[cur])
+            cur = int(np.argmax(cand))
+            chain.append(cur)
+            visited[cur] = True
+        perm = nonempty[np.asarray(chain, dtype=np.int64)]
+    else:
+        perm = np.zeros((0,), np.int64)
+    perm = np.concatenate([perm, np.nonzero(pop == 0)[0]]).astype(np.int32)
+
+    # never-worse guard: greedy chaining can *fragment* a pattern with no
+    # exploitable structure (splitting a cohesive block-row's rows across
+    # two permuted block-rows mints extra blocks).  The identity
+    # permutation under the same occupancy refinement never exceeds the
+    # original block count, so fall back to it unless the chain strictly
+    # wins — reorder_rows alone never degrades the layout, and the
+    # autotuner's surrogate only ever sees the better of the two.
+    def _grp(p):
+        return sig[p].reshape(gm, bm, gk).any(axis=1)     # (gm, gk)
+
+    identity = np.arange(m, dtype=np.int32)
+    if int(_grp(perm).sum()) >= int(_grp(identity).sum()):
+        perm = identity
+    inv = np.argsort(perm).astype(np.int32)
+
+    # permuted block pattern + payload gather maps
+    grp = _grp(perm)
+    rows_p, cols_p = np.nonzero(grp)                      # canonical order
+    nnzb_p = rows_p.size
+    cap_p = max(nnzb_p, 1)
+    block_col = np.full((cap_p,), -1, np.int32)
+    block_col[:nnzb_p] = cols_p
+    block_row = np.full((cap_p,), max(gm - 1, 0), np.int32)
+    block_row[:nnzb_p] = rows_p
+    row_ptr = np.zeros((gm + 1,), np.int32)
+    np.cumsum(grp.sum(axis=1), out=row_ptr[1:])
+    slot_of = np.full((gm, gk), -1, np.int64)
+    if nnzb:
+        slot_of[brow, bcol] = np.arange(nnzb, dtype=np.int64)
+    src_block = np.zeros((cap_p, bm), np.int32)
+    src_row = np.zeros((cap_p, bm), np.int32)
+    src_live = np.zeros((cap_p, bm), bool)
+    if nnzb_p:
+        orig_el = perm.astype(np.int64)[
+            rows_p[:, None] * bm + np.arange(bm, dtype=np.int64)[None, :]]
+        src = slot_of[orig_el // bm, cols_p[:, None]]     # (nnzb_p, bm)
+        src_live[:nnzb_p] = src >= 0
+        src_block[:nnzb_p] = np.maximum(src, 0).astype(np.int32)
+        src_row[:nnzb_p] = (orig_el % bm).astype(np.int32)
+
+    nnz_el = int(np.count_nonzero(blocks_h))
+    return RowReorder(
+        perm=perm, inv=inv, block_col=block_col, block_row=block_row,
+        row_ptr=row_ptr, src_block=src_block, src_row=src_row,
+        src_live=src_live, shape=a.shape, block_shape=a.block_shape,
+        density_before=nnz_el / max(nnzb * bm * bk, 1),
+        density_after=nnz_el / max(nnzb_p * bm * bk, 1))
+
+
+def apply_reorder(a, rr: RowReorder) -> BlockCSR:
+    """Materialize the permuted container: host metadata from ``rr`` plus
+    one traced payload gather from the original blocks.  Jit- and
+    grad-composable (the gather is a plain jnp op — its VJP scatters the
+    block cotangents back to the original slots)."""
+    a = as_block_csr(a)
+    if a.shape != rr.shape or a.block_shape != rr.block_shape:
+        raise ValueError(
+            f"RowReorder was built for {rr.shape} / blocks "
+            f"{rr.block_shape}, operand is {a.shape} / blocks "
+            f"{a.block_shape}")
+    gathered = a.blocks[jnp.asarray(rr.src_block),
+                        jnp.asarray(rr.src_row)]          # (cap_p, bm, bk)
+    blocks = jnp.where(jnp.asarray(rr.src_live)[..., None], gathered, 0)
+    return BlockCSR(blocks=blocks,
+                    block_col=jnp.asarray(rr.block_col),
+                    block_row=jnp.asarray(rr.block_row),
+                    row_ptr=jnp.asarray(rr.row_ptr),
+                    shape=rr.shape, block_shape=rr.block_shape)
+
+
+def pattern_standin(rr: RowReorder) -> BlockCSR:
+    """Metadata-only stand-in holding the permuted pattern (the same
+    ``(cap, 1, 1)`` zero-payload idiom ``transpose_train_plan`` uses) —
+    what the planner and surrogate read; never executed."""
+    return BlockCSR(
+        blocks=np.zeros((rr.n_blocks_max, 1, 1), np.float32),
+        block_col=rr.block_col, block_row=rr.block_row,
+        row_ptr=rr.row_ptr, shape=rr.shape, block_shape=rr.block_shape)
+
+
+def plan_reordered_spmm(a, rr: Optional[RowReorder] = None, *,
+                        n_lanes: int = 8, chunk: Optional[int] = None,
+                        row_atomic: bool = False,
+                        fused: str = "auto") -> SpmmPlan:
+    """Plan on the permuted pattern and attach the :class:`RowReorder`.
+
+    The returned :class:`~repro.kernels.schedule.SpmmPlan` carries the
+    reorder as ``plan.reorder``; ``ops.maple_spmm`` applies the
+    permutation around the kernel whenever that attribute is present
+    (plans built anywhere else simply lack it).  Pass a precomputed
+    ``rr`` to amortize the O(M²) similarity pass across knob configs —
+    the autotuner does.
+    """
+    if rr is None:
+        rr = reorder_rows(a)
+    plan = plan_spmm(pattern_standin(rr), n_lanes=n_lanes, chunk=chunk,
+                     row_atomic=row_atomic, fused=fused)
+    object.__setattr__(plan, "reorder", rr)
+    return plan

@@ -59,8 +59,10 @@ from typing import Dict, List, Optional, Sequence, Tuple, TypeVar
 
 import numpy as np
 
-from repro.core.csr import (CSR, BlockCSR, bsr_transpose_meta, ell_slots,
+from repro.core.csr import (CSR, BlockCSR, bsr_transpose_meta,
                             spgemm_row_upper_bounds)
+from repro.core.formats import (as_block_csr, as_element_csr,
+                                block_pattern_meta, ell_slots)
 from repro.core.maple import (SpGEMMStats, analyze_spgemm,
                               baseline_pe_cycles, expand_partials,
                               maple_pe_cycles)
@@ -324,6 +326,14 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
               fused: str = "auto") -> SpmmPlan:
     """Build a load-balanced lane schedule from BlockCSR metadata.
 
+    ``a`` may be any blocked :class:`~repro.core.formats.SparseFormat`
+    (``BlockCSR`` / ``EllPack`` / ``BitmapBlocked``) — non-BlockCSR
+    operands lower onto the canonical metadata via
+    ``core.formats.as_block_csr`` first, so one plan layer serves every
+    storage format (the resulting plan's ``order`` indexes canonical
+    packed slots, which is exactly what the execution wrapper lowers the
+    payload to).
+
     ``row_atomic=True`` keeps every block-row whole (one chunk per row) —
     the MatRaptor-style baseline schedule, exposed so benchmarks and tests
     can price both on identical machinery.  It is **incompatible with an
@@ -344,6 +354,8 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
     epilogue, smallest output footprint.  Both layouts are benchmarked
     side by side in ``BENCH_kernels.json``.
     """
+    if not isinstance(a, BlockCSR):
+        a = as_block_csr(a)
     if n_lanes < 1:
         raise ValueError(f"n_lanes={n_lanes} < 1")
     if fused == "auto":
@@ -421,11 +433,16 @@ def plan_spmm(a: BlockCSR, *, n_lanes: int = 8,
 # --------------------------------------------------------------------------
 
 def pattern_fingerprint(a: BlockCSR) -> str:
-    """Stable content hash of a BlockCSR's **sparsity pattern** — the plan
-    cache key (``kernels.autotune``).
+    """Stable content hash of a blocked operand's **sparsity pattern** —
+    the plan cache key (``kernels.autotune``).
 
-    Hashes exactly what planning reads: logical shape, block shape,
-    ``row_ptr`` and the **live prefix** of ``block_col``.  Deliberately
+    Hashes exactly what planning reads, through the format-independent
+    view ``core.formats.block_pattern_meta``: logical shape, block shape,
+    ``row_ptr`` and the **live prefix** of ``block_col`` in canonical
+    order.  Any blocked :class:`~repro.core.formats.SparseFormat` is
+    accepted, and equivalent patterns fingerprint identically whatever
+    format holds them (pinned in ``tests/test_formats.py``) — so the
+    autotuner cache is shared across storage formats.  Deliberately
     *excluded*: the payload (plans are pattern-only) and the container
     capacity ``n_blocks_max`` (a plan gathers only live slots
     ``< nnzb``, so the same plan is valid for any capacity holding this
@@ -434,14 +451,12 @@ def pattern_fingerprint(a: BlockCSR) -> str:
     """
     import hashlib
 
-    rptr = np.ascontiguousarray(np.asarray(a.row_ptr), dtype=np.int64)
-    nnzb = int(rptr[-1])
-    cols = np.ascontiguousarray(
-        np.asarray(a.block_col)[:nnzb], dtype=np.int32)
+    shape, block_shape, rptr, live_cols = block_pattern_meta(a)
     h = hashlib.sha256()
-    h.update(np.asarray(a.shape + a.block_shape, np.int64).tobytes())
-    h.update(rptr.tobytes())
-    h.update(cols.tobytes())
+    h.update(np.asarray(tuple(shape) + tuple(block_shape),
+                        np.int64).tobytes())
+    h.update(np.ascontiguousarray(rptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(live_cols, dtype=np.int32).tobytes())
     return h.hexdigest()
 
 
@@ -464,6 +479,7 @@ def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
                     shard_counts: Sequence[int] = (1,),
                     col_shard_counts: Sequence[int] = (1,),
                     fused_layouts: Sequence[str] = ("rmw", "compact"),
+                    reorder: bool | str = False,
                     ) -> List[Dict]:
     """Enumerate the discrete SpMM schedule knob space for one pattern.
 
@@ -480,13 +496,28 @@ def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
     cycles are per-output-column-tile, so the makespan does not depend on
     the column split — exists so a caller can *pin* the memory layout,
     with single-device entries always at ``n_col_shards=1``).
+    ``reorder`` adds the similarity row-reordering pass
+    (``kernels.reorder``) as a knob: ``False`` (default) never reorders,
+    ``True`` always does, ``"auto"`` enumerates both so the search
+    prices them against each other.  Reordering permutes block-rows
+    before planning and is undone on the output, so it composes with
+    every single-device knob; it is **not** enumerated on partitioned
+    entries (``n_shards > 1``) — the permutation would have to thread
+    through the row-shard split maps, a follow-on recorded in
+    ROADMAP.md.
+
     Deterministic order — the autotuner's tie-break and seeding
     contract depends on it.  Not enumerated (documented in
     kernels/README.md): the block shape (a *container* property — changing
     it reshapes the operand), ``bn`` (an execution tile, not a schedule
     property), and the SpGEMM balance axis (different planner).
     """
-    rptr = np.asarray(a.row_ptr).astype(np.int64)
+    if reorder not in (False, True, "auto"):
+        raise ValueError(f"reorder must be False | True | 'auto', "
+                         f"got {reorder!r}")
+    reorder_opts = {False: (False,), True: (True,),
+                    "auto": (False, True)}[reorder]
+    rptr = block_pattern_meta(a)[2]
     row_lens = np.diff(rptr)
     nnzb = int(rptr[-1])
     lanes_all: List[int] = []
@@ -510,23 +541,30 @@ def spmm_knob_space(a: BlockCSR, *, n_lanes_max: int = 16,
         # exists on the partitioned schedule
         layouts = fused_layouts if n_shards == 1 else ("compact",)
         col_counts = [1] if n_shards == 1 else list(col_shard_counts)
+        # the reorder pass is a single-device knob (see docstring)
+        ro_opts = reorder_opts if n_shards == 1 else (False,)
         for n_col_shards in col_counts:
             if n_col_shards < 1:
                 raise ValueError(f"col shard count {n_col_shards} < 1")
-            for device_chunk in dev_chunks:
-                for n_lanes in lanes_all:
-                    for fused in layouts:
-                        cfgs.append(dict(n_lanes=n_lanes, chunk=None,
-                                         row_atomic=True, fused=fused,
-                                         n_shards=n_shards,
-                                         n_col_shards=n_col_shards,
-                                         device_chunk=device_chunk))
-                        for chunk in _chunk_candidates(row_lens, n_lanes):
-                            cfgs.append(dict(n_lanes=n_lanes, chunk=chunk,
-                                             row_atomic=False, fused=fused,
+            for ro in ro_opts:
+                for device_chunk in dev_chunks:
+                    for n_lanes in lanes_all:
+                        for fused in layouts:
+                            cfgs.append(dict(n_lanes=n_lanes, chunk=None,
+                                             row_atomic=True, fused=fused,
                                              n_shards=n_shards,
                                              n_col_shards=n_col_shards,
-                                             device_chunk=device_chunk))
+                                             device_chunk=device_chunk,
+                                             reorder=ro))
+                            for chunk in _chunk_candidates(row_lens,
+                                                           n_lanes):
+                                cfgs.append(dict(
+                                    n_lanes=n_lanes, chunk=chunk,
+                                    row_atomic=False, fused=fused,
+                                    n_shards=n_shards,
+                                    n_col_shards=n_col_shards,
+                                    device_chunk=device_chunk,
+                                    reorder=ro))
     return cfgs
 
 
@@ -696,7 +734,7 @@ class SpgemmPlan(ExecutionPlan):
       the paper's Eq. (8) scatter by j' made explicit, precomputed so the
       kernel's column-indexed PSB needs no runtime search;
     * ``a_gather``/``a_live``, ``b_gather``/``b_live`` — ELL slot maps
-      (``core.csr.ell_slots``) so the numeric phase regularizes *values*
+      (``core.formats.ell_slots``) so the numeric phase regularizes *values*
       with a traced gather, never touching host copies;
     * ``lane_work`` — realized partial products per lane (the balancing
       target).
@@ -749,7 +787,13 @@ def plan_spgemm(a: CSR, b: CSR, *, n_lanes: int = 8,
 
     Host-side over metadata; values are never read, so the plan can be
     built once per sparsity pattern and closed over by a jitted call.
+    Blocked :class:`~repro.core.formats.SparseFormat` operands lower to
+    the element pattern they store via ``core.formats.as_element_csr``.
     """
+    if not isinstance(a, CSR):
+        a = as_element_csr(a)
+    if not isinstance(b, CSR):
+        b = as_element_csr(b)
     if a.shape[1] != b.shape[0]:
         raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
     if n_lanes < 1:

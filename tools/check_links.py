@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs.
+
+Walks every tracked ``*.md`` file, extracts inline links
+(``[text](target)``), and verifies that each *local* target resolves to
+a file or directory relative to the markdown file that names it.
+Anchors (``#section``) are stripped before resolution; external schemes
+(``http://``, ``https://``, ``mailto:``) are skipped — CI must not
+depend on the network.
+
+Exit status is the number of broken links (0 = clean), and each broken
+link is printed as ``file:line: target`` so editors can jump to it.
+
+Usage::
+
+    python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style links are not used in this repo.
+# [text](target) with no nesting — good enough for our docs, and a
+# false *miss* here just means a link goes unchecked, never a false CI
+# failure.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__"}
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if any(part in _SKIP_DIRS for part in path.parts):
+            continue
+        yield path
+
+
+def check_file(path: Path) -> list[tuple[int, str]]:
+    broken: list[tuple[int, str]] = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for match in _LINK.finditer(line):
+            target = match.group(1)
+            if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            local = target.split("#", 1)[0]
+            if not local:
+                continue
+            if not (path.parent / local).exists():
+                broken.append((lineno, target))
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(".")
+    n_broken = 0
+    n_files = 0
+    n_links = 0
+    for md in iter_markdown(root):
+        n_files += 1
+        text = md.read_text()
+        n_links += sum(
+            1
+            for m in _LINK.finditer(text)
+            if not m.group(1).startswith(_SKIP_SCHEMES)
+            and not m.group(1).startswith("#")
+        )
+        for lineno, target in check_file(md):
+            print(f"{md}:{lineno}: broken link -> {target}")
+            n_broken += 1
+    print(f"checked {n_files} markdown files, {n_links} local links, "
+          f"{n_broken} broken")
+    return n_broken
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
